@@ -1,0 +1,49 @@
+"""Figure 2 reproduction: DLP vs TLP cycle-count boost for 2D convolutions
+across matrix sizes (the paper's key plot: TLP dominates for small vectors,
+DLP grows with vector size, TLP+DLP always beats pure DLP).
+"""
+from __future__ import annotations
+
+from benchmarks.paper_data import make_config
+from repro.core.workloads import homogeneous_cycles
+
+SIZES = ("conv4", "conv8", "conv16", "conv32")
+
+
+def run(emit) -> dict:
+    base = {k: homogeneous_cycles(make_config("SISD", 1), k)["avg_cycles"]
+            for k in SIZES}
+    out = {"sisd": base}
+    emit("# --- Fig 2: speedup over SISD (rows: scheme, cols: conv size) ---")
+    emit(f"{'scheme':16s} " + " ".join(f"{k:>8s}" for k in SIZES))
+    curves = {
+        "DLP only (D=8)": ("SIMD", 8),
+        "TLP only (MIMD)": ("SymMIMD", 1),
+        "TLP+DLP (D=8)": ("SymMIMD", 8),
+        "Het TLP+DLP D=8": ("HetMIMD", 8),
+    }
+    for label, (scheme, D) in curves.items():
+        cfg = make_config(scheme, D)
+        boosts = {}
+        for k in SIZES:
+            c = homogeneous_cycles(cfg, k)["avg_cycles"]
+            boosts[k] = base[k] / c
+        out[label] = boosts
+        emit(f"{label:16s} " + " ".join(f"{boosts[k]:8.2f}x" for k in SIZES))
+
+    # the paper's qualitative findings as assertions
+    checks = {
+        # TLP beats DLP at the smallest size
+        "tlp_beats_dlp_small": out["TLP only (MIMD)"]["conv4"] >
+                               out["DLP only (D=8)"]["conv4"],
+        # DLP boost grows with matrix size
+        "dlp_grows": out["DLP only (D=8)"]["conv32"] >
+                     out["DLP only (D=8)"]["conv4"],
+        # combined always >= pure DLP
+        "combined_beats_dlp": all(
+            out["TLP+DLP (D=8)"][k] >= out["DLP only (D=8)"][k]
+            for k in SIZES),
+    }
+    out["checks"] = checks
+    emit(f"# checks: {checks}")
+    return out

@@ -1,0 +1,58 @@
+"""Figure 4 reproduction: average energy per algorithmic operation,
+normalized to ZeroRiscy. Energy model: E ∝ (LUT + 2FF) x cycles (dynamic
+power proxy from the paper's own synthesis table; frequency cancels).
+"""
+from __future__ import annotations
+
+from benchmarks.paper_data import make_config
+from repro.core.baselines import baseline_cycles, synthesis_for
+from repro.core.workloads import (BASELINE_ARGS, KERNEL_BUILDERS,
+                                  homogeneous_cycles)
+
+KERNELS = ("conv32", "fft256", "matmul64")
+SCHEMES = [("SISD", 1), ("SIMD", 8), ("SymMIMD", 1), ("SymMIMD", 8),
+           ("HetMIMD", 1), ("HetMIMD", 8)]
+
+ALG_OPS = {"conv4": 2 * 4 * 4 * 9, "conv8": 2 * 8 * 8 * 9,
+           "conv16": 2 * 16 * 16 * 9, "conv32": 2 * 32 * 32 * 9,
+           "fft256": 10 * 128 * 8, "matmul64": 2 * 64 ** 3}
+
+
+def _energy_per_op(scheme_name: str, D: int, cycles: float, kernel: str):
+    ff, lut, _ = synthesis_for(scheme_name, D)
+    return (lut + 2.0 * ff) * cycles / ALG_OPS[kernel]
+
+
+def run(emit) -> dict:
+    zr = {}
+    for k in KERNELS:
+        kind, kw = BASELINE_ARGS[k]
+        cyc = baseline_cycles("zeroriscy", kind, **kw)
+        zr[k] = _energy_per_op("zeroriscy", 0, cyc, k)
+    emit("# --- Fig 4: energy/op relative to ZeroRiscy (lower=better) ---")
+    emit(f"{'scheme':14s} " + " ".join(f"{k:>9s}" for k in KERNELS))
+    out = {}
+    best_saving = 0.0
+    for scheme, D in SCHEMES:
+        cfg = make_config(scheme, D)
+        row = {}
+        for k in KERNELS:
+            cyc = homogeneous_cycles(cfg, k)["avg_cycles"]
+            e = _energy_per_op(cfg.scheme, D, cyc, k)
+            row[k] = e / zr[k]
+            best_saving = max(best_saving, 100 * (1 - row[k]))
+        out[f"{scheme}-D{D}"] = row
+        emit(f"{scheme + f' D={D}':14s} " +
+             " ".join(f"{row[k]:9.3f}" for k in KERNELS))
+    for core in ("klessydra-t03", "ri5cy"):
+        row = {}
+        for k in KERNELS:
+            kind, kw = BASELINE_ARGS[k]
+            cyc = baseline_cycles(core, kind, **kw)
+            row[k] = _energy_per_op(core, 0, cyc, k) / zr[k]
+        out[core] = row
+        emit(f"{core:14s} " + " ".join(f"{row[k]:9.3f}" for k in KERNELS))
+    out["checks"] = {"best_saving_pct": best_saving}
+    emit(f"# best energy saving vs ZeroRiscy: {best_saving:.0f}% "
+         f"(paper: >85%)")
+    return out

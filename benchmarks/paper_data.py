@@ -1,0 +1,107 @@
+"""The paper's published numbers (Tables 2-3) — inputs for validation.
+
+Keys: (scheme, D) with scheme in {SISD, SIMD, SymMIMD, HetMIMD} (paper's
+"Sym. MIMD + SIMD" etc. are the D>1 rows of the MIMD schemes).
+"""
+
+# Table 2 — average cycle count per kernel, homogeneous workload
+TABLE2_HOMOGENEOUS = {
+    ("SISD", 1): {"conv4": 1105, "conv8": 3060, "conv16": 9727,
+                  "conv32": 34201, "fft256": 33033, "matmul64": 728187},
+    ("SIMD", 2): {"conv4": 895, "conv8": 2245, "conv16": 6261,
+                  "conv32": 20374, "fft256": 25647, "matmul64": 602458},
+    ("SIMD", 4): {"conv4": 824, "conv8": 1768, "conv16": 4607,
+                  "conv32": 13444, "fft256": 22812, "matmul64": 543164},
+    ("SIMD", 8): {"conv4": 824, "conv8": 1613, "conv16": 3692,
+                  "conv32": 10069, "fft256": 21555, "matmul64": 484436},
+    ("SymMIMD", 1): {"conv4": 626, "conv8": 1493, "conv16": 3887,
+                     "conv32": 13536, "fft256": 18726, "matmul64": 462066},
+    ("SymMIMD", 2): {"conv4": 629, "conv8": 1190, "conv16": 3123,
+                     "conv32": 8681, "fft256": 16827, "matmul64": 378748},
+    ("SymMIMD", 4): {"conv4": 560, "conv8": 1190, "conv16": 2543,
+                     "conv32": 7148, "fft256": 15993, "matmul64": 328962},
+    ("SymMIMD", 8): {"conv4": 560, "conv8": 1152, "conv16": 2543,
+                     "conv32": 6006, "fft256": 15726, "matmul64": 316270},
+    ("HetMIMD", 1): {"conv4": 663, "conv8": 1521, "conv16": 4153,
+                     "conv32": 13565, "fft256": 22839, "matmul64": 556463},
+    ("HetMIMD", 2): {"conv4": 638, "conv8": 1274, "conv16": 3280,
+                     "conv32": 9167, "fft256": 18468, "matmul64": 425978},
+    ("HetMIMD", 4): {"conv4": 573, "conv8": 1213, "conv16": 2688,
+                     "conv32": 7473, "fft256": 16887, "matmul64": 360863},
+    ("HetMIMD", 8): {"conv4": 573, "conv8": 1079, "conv16": 2580,
+                     "conv32": 6285, "fft256": 17604, "matmul64": 328178},
+}
+
+# Table 2 — composite workload (conv32 / fft256 / matmul64 columns)
+TABLE2_COMPOSITE = {
+    ("SISD", 1): {"conv32": 66043, "fft256": 80874, "matmul64": 476771},
+    ("SIMD", 2): {"conv32": 21976, "fft256": 60019, "matmul64": 645705},
+    ("SIMD", 4): {"conv32": 16850, "fft256": 29144, "matmul64": 431773},
+    ("SIMD", 8): {"conv32": 11324, "fft256": 22482, "matmul64": 414420},
+    ("SymMIMD", 1): {"conv32": 20953, "fft256": 17824, "matmul64": 292564},
+    ("SymMIMD", 2): {"conv32": 16144, "fft256": 15839, "matmul64": 222370},
+    ("SymMIMD", 4): {"conv32": 15868, "fft256": 14942, "matmul64": 182580},
+    ("SymMIMD", 8): {"conv32": 15581, "fft256": 14613, "matmul64": 168031},
+    ("HetMIMD", 1): {"conv32": 27155, "fft256": 37111, "matmul64": 265567},
+    ("HetMIMD", 2): {"conv32": 15973, "fft256": 24611, "matmul64": 251201},
+    ("HetMIMD", 4): {"conv32": 16042, "fft256": 19175, "matmul64": 181290},
+    ("HetMIMD", 8): {"conv32": 13921, "fft256": 17298, "matmul64": 187877},
+}
+
+# Table 2 — baseline cores (homogeneous / composite)
+TABLE2_BASELINES = {
+    "klessydra-t03": {"conv4": 1819, "conv8": 5737, "conv16": 20714,
+                      "conv32": 79230, "fft256": 47256, "matmul64": 2679304,
+                      "comp_conv32": 138959, "comp_fft256": 46733,
+                      "comp_matmul64": 2775779},
+    "ri5cy": {"conv4": 1377, "conv8": 4247, "conv16": 15088,
+              "conv32": 57020, "fft256": 37344, "matmul64": 1360854,
+              "comp_conv32": 81534, "comp_fft256": 37350,
+              "comp_matmul64": 1369572},
+    "zeroriscy": {"conv4": 2510, "conv8": 8111, "conv16": 29583,
+                  "conv32": 113793, "fft256": 61158, "matmul64": 4006241,
+                  "comp_conv32": 197010, "comp_fft256": 61163,
+                  "comp_matmul64": 4043376},
+}
+
+# Table 3 — higher-order filters on 32x32 (cycles x1000, T us, E uJ)
+TABLE3_FILTERS = {
+    ("T13 SIMD", 2): {5: (53, 362, 51), 7: (101, 694, 97),
+                      9: (166, 1136, 159), 11: (247, 1689, 237)},
+    ("T13 SIMD", 8): {5: (25, 179, 34), 7: (46, 335, 65),
+                      9: (75, 543, 105), 11: (111, 803, 155)},
+    ("T13 Sym MIMD", 2): {5: (20, 148, 27), 7: (36, 272, 49),
+                          9: (57, 436, 79), 11: (84, 641, 117)},
+    ("T13 Sym MIMD", 8): {5: (12, 113, 29), 7: (19, 183, 47),
+                          9: (30, 284, 73), 11: (43, 408, 105)},
+    ("T13 Het MIMD", 2): {5: (21, 159, 28), 7: (38, 291, 52),
+                          9: (60, 467, 83), 11: (89, 687, 122)},
+    ("T03", 0): {5: (247, 1120, 216), 7: (515, 2328, 448),
+                 9: (881, 3985, 767), 11: (1369, 6191, 1191)},
+    ("RI5CY", 0): {5: (180, 1971, 252), 7: (385, 4218, 539),
+                   9: (663, 7252, 928), 11: (1000, 10949, 1400)},
+    ("ZeroRiscy", 0): {5: (319, 2721, 226), 7: (675, 5754, 479),
+                       9: (1130, 9637, 802), 11: (1698, 14482, 1205)},
+}
+
+# headline claims (paper §CONCLUSIONS and body)
+CLAIMS = {
+    "small_conv_speedup_vs_t03": 3.0,       # "up to 3x ... small matrix"
+    "large_speedup_vs_t03": 13.0,           # conv32/matmul vs T03
+    "large_speedup_vs_ri5cy": 9.0,
+    "large_speedup_vs_zeroriscy": 19.0,
+    "het_vs_sym_max_pct": 7.0,              # "1% to 7% more cycles"
+    "time_speedup_vs_zeroriscy": 17.0,      # conv32, sym MIMD+SIMD
+    "energy_saving_pct": 85.0,              # ">85% energy saving"
+    "filter11_speedup_vs_zeroriscy": 15.0,  # "up to 15x with 11x11"
+}
+
+
+def make_config(scheme: str, D: int, **kw):
+    from repro.configs.base import KlessydraConfig
+    M, F = {"SISD": (1, 1), "SIMD": (1, 1), "SymMIMD": (3, 3),
+            "HetMIMD": (3, 1)}[scheme]
+    return KlessydraConfig(f"{scheme} D={D}", M=M, F=F, D=D, **kw)
+
+
+SCHEME_KEYS = list(TABLE2_HOMOGENEOUS)

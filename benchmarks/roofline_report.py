@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/*.json):
+per (arch x shape x mesh): the three terms, the bottleneck, and
+MODEL_FLOPS / HLO_FLOPs utilization.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_spec, SHAPES
+from repro.models import model_zoo as zoo
+
+ART = Path("artifacts/dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D fwd-only."""
+    spec = get_spec(arch)
+    cfg = spec.model
+    shape = SHAPES[shape_name]
+    n_active = zoo.active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # decode: one token
+
+
+def run(emit) -> dict:
+    rows = []
+    emit("# --- Roofline (per-device terms, seconds; 197TF/s, 819GB/s, "
+         "50GB/s link) ---")
+    emit(f"{'arch':22s}{'shape':13s}{'mesh':9s}{'t_comp':>9s}{'t_mem':>9s}"
+         f"{'t_coll':>9s} {'bound':12s}{'MF/HF':>6s}{'fit':>5s}")
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok" or r.get("tag"):
+            continue
+        mesh = "2x16x16" if "multipod" in f.name else "16x16"
+        t = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hf = r["flops_per_device"] * r["chips"]
+        util = mf / hf if hf else 0.0
+        bound = t["bottleneck"].replace("t_", "").replace("_s", "")
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh,
+            "t_compute": t["t_compute_s"], "t_memory": t["t_memory_s"],
+            "t_collective": t["t_collective_s"], "bottleneck": bound,
+            "model_over_hlo_flops": util, "fits": r["fits_hbm"],
+        })
+        emit(f"{r['arch']:22s}{r['shape']:13s}{mesh:9s}"
+             f"{t['t_compute_s']:9.4f}{t['t_memory_s']:9.4f}"
+             f"{t['t_collective_s']:9.4f} {bound:12s}{util:6.2f}"
+             f"{'  ok' if r['fits_hbm'] else ' OOM'}")
+    # summary: bottleneck histogram
+    hist = {}
+    for row in rows:
+        if row["mesh"] == "16x16":
+            hist[row["bottleneck"]] = hist.get(row["bottleneck"], 0) + 1
+    emit(f"# single-pod bottleneck histogram: {hist}")
+    return {"rows": rows, "bottlenecks": hist}

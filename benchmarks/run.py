@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,fig2,...]
+
+Prints each benchmark's detailed report, then a final
+``name,us_per_call,derived`` CSV summary (us_per_call = harness wall time
+per benchmark; derived = that benchmark's headline check).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
+                         "roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig2_dlp_tlp, fig3_exec_time, fig4_energy,
+                            kernel_micro, roofline_report, table2_cycles,
+                            table3_filters)
+    benches = {
+        "table2": (table2_cycles,
+                   lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
+        "fig2": (fig2_dlp_tlp,
+                 lambda r: f"combined_beats_dlp={r['checks']['combined_beats_dlp']}"),
+        "fig3": (fig3_exec_time,
+                 lambda r: f"conv32_speedup={r['checks']['conv32_speedup_max']:.1f}x"),
+        "fig4": (fig4_energy,
+                 lambda r: f"best_saving={r['checks']['best_saving_pct']:.0f}%"),
+        "table3": (table3_filters,
+                   lambda r: f"f11_speedup={r['checks']['speedup_f11']:.1f}x"),
+        "kernels": (kernel_micro, lambda r: f"n_kernels={len(r)}"),
+        "roofline": (roofline_report,
+                     lambda r: f"cells={len(r['rows'])}"),
+    }
+    only = [s for s in args.only.split(",") if s]
+    rows = []
+    for name, (mod, derive) in benches.items():
+        if only and name not in only:
+            continue
+        print(f"\n================ {name} ================", flush=True)
+        t0 = time.perf_counter()
+        try:
+            result = mod.run(emit=print)
+            derived = derive(result)
+        except Exception as e:  # noqa: BLE001 — report but keep harness alive
+            derived = f"ERROR:{type(e).__name__}:{e}"
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((name, us, derived))
+    print("\n# name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,105 @@
+"""Table 2 reproduction: cycle counts for every (scheme x D x kernel) cell,
+homogeneous + composite workloads, vs the paper's published values.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_data import (CLAIMS, TABLE2_BASELINES,
+                                   TABLE2_COMPOSITE, TABLE2_HOMOGENEOUS,
+                                   make_config)
+from repro.core.baselines import baseline_cycles
+from repro.core.workloads import BASELINE_ARGS, composite_cycles, \
+    homogeneous_cycles
+
+KERNELS = ("conv4", "conv8", "conv16", "conv32", "fft256", "matmul64")
+
+
+def run(emit) -> dict:
+    sim_homog = {}
+    ratios = []
+    emit("# --- Table 2: homogeneous workload (sim vs paper, ratio) ---")
+    for (scheme, D), paper_vals in TABLE2_HOMOGENEOUS.items():
+        cfg = make_config(scheme, D)
+        row = {}
+        parts = []
+        for k in KERNELS:
+            sim = homogeneous_cycles(cfg, k)["avg_cycles"]
+            row[k] = sim
+            if k in paper_vals:
+                r = sim / paper_vals[k]
+                ratios.append(r)
+                parts.append(f"{k}={sim:.0f}/{paper_vals[k]}({r:.2f})")
+        sim_homog[(scheme, D)] = row
+        emit(f"{scheme:8s} D={D}: " + " ".join(parts))
+
+    emit("# --- Table 2: baseline cores (analytic models vs paper) ---")
+    for core, vals in TABLE2_BASELINES.items():
+        parts = []
+        for k in KERNELS:
+            kind, kw = BASELINE_ARGS[k]
+            sim = baseline_cycles(core, kind, **kw)
+            parts.append(f"{k}={sim}/{vals[k]}({sim / vals[k]:.2f})")
+        emit(f"{core:14s}: " + " ".join(parts))
+
+    emit("# --- Table 2: composite workload ---")
+    emit("# (the paper's composite normalization is not fully specified; we")
+    emit("#  report per-hart latency/instance and validate the SCHEME")
+    emit("#  ORDERING + het-vs-sym closeness, which are the paper's claims)")
+    sim_comp = {}
+    for (scheme, D) in [("SISD", 1), ("SIMD", 8), ("SymMIMD", 1),
+                        ("SymMIMD", 8), ("HetMIMD", 1), ("HetMIMD", 8)]:
+        cfg = make_config(scheme, D)
+        r = composite_cycles(cfg)
+        sim_comp[(scheme, D)] = r
+        p = TABLE2_COMPOSITE[(scheme, D)]
+        emit(f"{scheme:8s} D={D}: " + " ".join(
+            f"{k}={r[k]:.0f} (paper {p[k]})"
+            for k in ("conv32", "fft256", "matmul64")))
+    comp_order_ok = all(
+        sim_comp[("SymMIMD", 8)][k] <= sim_comp[("SymMIMD", 1)][k] and
+        sim_comp[("SymMIMD", 8)][k] <= sim_comp[("SISD", 1)][k]
+        for k in ("conv32", "fft256", "matmul64"))
+    het_comp = max(sim_comp[("HetMIMD", 8)][k] / sim_comp[("SymMIMD", 8)][k]
+                   for k in ("conv32", "fft256", "matmul64"))
+
+    # ---- headline-claim checks (the paper's 3x/13x/9x/19x are conv-based)
+    checks = {}
+    t03_small = baseline_cycles("klessydra-t03", "conv", S=4)
+    best_small = min(v["conv4"] for v in sim_homog.values())
+    checks["small_conv_speedup_vs_t03"] = t03_small / best_small
+    t03_c = baseline_cycles("klessydra-t03", "conv", S=32)
+    best_c = min(v["conv32"] for v in sim_homog.values())
+    checks["large_speedup_vs_t03"] = t03_c / best_c
+    checks["large_speedup_vs_zeroriscy"] = \
+        baseline_cycles("zeroriscy", "conv", S=32) / best_c
+    checks["large_speedup_vs_ri5cy"] = \
+        baseline_cycles("ri5cy", "conv", S=32) / best_c
+    checks["composite_ordering_ok"] = comp_order_ok
+    checks["composite_het_vs_sym_max"] = het_comp
+    het_sym = []
+    for D in (1, 2, 4, 8):
+        for k in KERNELS:
+            het_sym.append(sim_homog[("HetMIMD", D)][k] /
+                           sim_homog[("SymMIMD", D)][k])
+    checks["het_vs_sym_median_pct"] = 100 * (float(np.median(het_sym)) - 1)
+    checks["fit_geomean_ratio"] = float(np.exp(np.mean(np.log(ratios))))
+
+    emit("# --- headline claims (paper -> ours) ---")
+    emit(f"small conv speedup vs T03:   paper up to "
+         f"{CLAIMS['small_conv_speedup_vs_t03']}x, ours "
+         f"{checks['small_conv_speedup_vs_t03']:.1f}x")
+    emit(f"large kernel speedup vs T03: paper {CLAIMS['large_speedup_vs_t03']}x, "
+         f"ours {checks['large_speedup_vs_t03']:.1f}x")
+    emit(f"vs RI5CY: paper {CLAIMS['large_speedup_vs_ri5cy']}x, ours "
+         f"{checks['large_speedup_vs_ri5cy']:.1f}x; vs ZeroRiscy: paper "
+         f"{CLAIMS['large_speedup_vs_zeroriscy']}x, ours "
+         f"{checks['large_speedup_vs_zeroriscy']:.1f}x")
+    emit(f"het vs sym median overhead: paper 1-7%, ours "
+         f"{checks['het_vs_sym_median_pct']:.1f}% (composite max "
+         f"{100 * (het_comp - 1):.1f}%)")
+    emit(f"composite scheme ordering reproduced: {comp_order_ok}")
+    emit(f"overall cell fit geomean(sim/paper) = "
+         f"{checks['fit_geomean_ratio']:.2f}")
+    return {"homogeneous": sim_homog, "composite": sim_comp,
+            "checks": checks}

@@ -1,0 +1,55 @@
+"""The paper's composite workload: conv + FFT + MatMul on three harts.
+
+  1. Cycle-simulate the composite workload across coprocessor schemes
+     (reproduces the paper's observation that heterogeneous MIMD tracks
+     symmetric MIMD within a few percent at 1/3 the functional units).
+  2. Run the SAME composite as ONE het-MIMD Pallas kernel: grid slot =
+     hart, switched tile programs, dedicated VMEM blocks.
+
+Run:  PYTHONPATH=src python examples/composite_workload.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import KlessydraConfig
+from repro.core.workloads import composite_cycles
+from repro.kernels import ref
+from repro.kernels.het_mimd import het_mimd_composite
+
+
+def simulate():
+    print("=== composite workload: cycle simulation ===")
+    print(f"{'scheme':18s} {'conv32':>9s} {'fft256':>9s} {'matmul64':>9s}")
+    for name, M, F, D in [("SISD", 1, 1, 1), ("SIMD D=8", 1, 1, 8),
+                          ("Sym MIMD D=8", 3, 3, 8),
+                          ("Het MIMD D=8", 3, 1, 8)]:
+        cfg = KlessydraConfig(name, M=M, F=F, D=D)
+        r = composite_cycles(cfg)
+        print(f"{name:18s} {r['conv32']:9.0f} {r['fft256']:9.0f} "
+              f"{r['matmul64']:9.0f}")
+
+
+def pallas_composite():
+    print("\n=== composite workload: one het-MIMD Pallas kernel ===")
+    rng = np.random.default_rng(0)
+    F = 3
+    img = jnp.asarray(rng.normal(0, 1, (34, 34)), jnp.float32)   # pre-padded
+    filt = jnp.asarray(rng.normal(0, 1, (F, F)), jnp.float32)
+    fre = jnp.asarray(rng.normal(0, 1, (4, 256)), jnp.float32)
+    fim = jnp.asarray(rng.normal(0, 1, (4, 256)), jnp.float32)
+    A = jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)
+    B = jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)
+    conv, ore, oim, mm = het_mimd_composite(img, filt, fre, fim, A, B)
+    wre, _ = ref.fft_ref(fre, fim)
+    print("  conv tile[0,:3]   =", np.asarray(conv[0, :3]))
+    print("  fft err (vs jnp)  =",
+          float(jnp.max(jnp.abs(ore - wre))))
+    print("  matmul err        =",
+          float(jnp.max(jnp.abs(mm - A @ B))))
+    print("  -> three heterogeneous kernels, ONE pallas_call, shared "
+          "compute engine, dedicated VMEM blocks (the het-MIMD scheme)")
+
+
+if __name__ == "__main__":
+    simulate()
+    pallas_composite()

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests (continuous batching demo).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(serve_main([
+        "--arch", "llama3.2-1b", "--reduced",
+        "--requests", "12", "--slots", "4",
+        "--max-seq", "96", "--max-new", "16",
+    ] + sys.argv[1:]))

@@ -1,0 +1,16 @@
+"""The paper's primary contribution as an executable system:
+
+  isa/spm/mfu    — the Table-1 scratchpad-resident vector ISA (functional)
+  coprocessor    — the SISD/SIMD/sym-MIMD/het-MIMD taxonomy (KlessydraConfig)
+  simulator      — event-driven IMT + coprocessor cycle model
+  programs       — conv2d / FFT / MatMul as KVI vector programs
+  workloads      — homogeneous/composite measurement protocol + energy model
+  baselines      — T03 / RI5CY / ZeroRiscy comparison cores (calibrated)
+
+The TPU-scale incarnation of the same ideas lives in repro.kernels (Pallas,
+SPM->VMEM) and repro.models/launch (TLP/DLP -> mesh axes).
+"""
+from repro.configs.base import KlessydraConfig, klessydra_taxonomy
+from repro.core import baselines, mfu, programs, simulator, spm, workloads
+from repro.core.isa import Instr, OPDEFS, Scalar, Unit
+from repro.core.simulator import SimResult, simulate

@@ -1,0 +1,175 @@
+"""Event-driven cycle simulator of the Klessydra-T13 IMT core + coprocessor.
+
+Microarchitecture model (paper §"THE KLESSYDRA-T IMT ARCHITECTURE"):
+  * 3 harts, pure IMT: hart h owns issue slots at cycles ≡ h (mod harts);
+    the feed-forward pipeline sustains 1 instruction/cycle aggregate with no
+    hazard hardware (the 3-hart rotation is the register-file access fence).
+  * Scalar instructions retire 1 per owned slot.
+  * Coprocessor instructions occupy their engine: MFU vector ops for
+    setup + ceil(len/(D*subword)) cycles; LSU transfers for
+    setup_mem + ceil(bytes/4) cycles (single 32-bit memory port, shared).
+  * A hart's coprocessor ops execute in program order (SPM consistency);
+    scalar work overlaps freely (paper: "The LSU works in parallel with
+    other units"; "parallel execution may occur between coprocessor and
+    non-coprocessor instructions").
+  * Contention by scheme:
+      shared (M=1,F=1):  one MFU — any busy vector op blocks all harts
+                         ("a hart requesting access to the busy MFU executes
+                         a self-referencing jump until the MFU becomes free")
+      sym-MIMD (M=F=3):  per-hart MFU/SPM — no inter-hart contention
+      het-MIMD (M=3,F=1): per-hart SPMI, shared MFU contended per INTERNAL
+                         unit (adder/multiplier/shifter/cmp/move)
+
+Event-driven: O(#instructions), not O(#cycles); validated invariants in
+tests (e.g. sym-MIMD cycles <= het-MIMD cycles <= shared cycles).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.configs.base import KlessydraConfig
+from repro.core.isa import Instr, Scalar, Unit, lsu_cycles, mfu_cycles
+
+Item = Union[Instr, Scalar]
+
+
+@dataclass
+class HartStats:
+    instructions: int = 0
+    vector_ops: int = 0
+    lsu_ops: int = 0
+    spin_cycles: int = 0
+    finish_cycle: int = 0
+
+
+@dataclass
+class SimResult:
+    cycles: int
+    per_hart: List[HartStats]
+    mfu_busy_cycles: float
+    lsu_busy_cycles: float
+    config: KlessydraConfig
+
+    @property
+    def mfu_utilization(self) -> float:
+        return self.mfu_busy_cycles / max(self.cycles, 1)
+
+
+def _align_up(t: int, phase: int, period: int) -> int:
+    """Smallest t' >= t with t' ≡ phase (mod period)."""
+    r = (t - phase) % period
+    return t if r == 0 else t + (period - r)
+
+
+class Simulator:
+    """Cycle simulation of one workload: programs[h] = instruction list for
+    hart h. Instruction lists mix Instr (coprocessor) and Scalar(n) items."""
+
+    def __init__(self, config: KlessydraConfig):
+        self.cfg = config
+
+    def _resource_holds(self, hart: int, instr: Instr):
+        """[(resource_key, duration)] an op must acquire. Two resources per
+        MFU op: the SPMI stream (2 passes for 2-source ops) and the
+        functional unit (line-rate). Sharing depends on the scheme."""
+        cfg = self.cfg
+        if instr.engine == "lsu":
+            dur = lsu_cycles(instr, cfg.mem_port_bytes,
+                             cfg.vector_setup_cycles + cfg.mem_latency_cycles)
+            # single memory port; the bank interleaver routes the transfer
+            # through the SPMI, so it contends with MFU streaming there
+            spmi = ("spmi", 0) if cfg.M == 1 else ("spmi", hart)
+            return [(("lsu", 0), dur), (spmi, dur)]
+        unit_c, spmi_c = mfu_cycles(instr, cfg.D, cfg.vector_setup_cycles)
+        if cfg.M == 1 and cfg.F == 1:
+            # shared: one SPMI + one MFU for everyone; SPMI streaming binds
+            return [(("spmi", 0), spmi_c), (("unit", 0), unit_c)]
+        if cfg.F == cfg.M and cfg.F > 1:
+            # symmetric MIMD: per-hart SPMI + per-hart MFU
+            return [(("spmi", hart), spmi_c), (("unit", hart), unit_c)]
+        # heterogeneous MIMD: per-hart SPMI, shared MFU per internal unit
+        return [(("spmi", hart), spmi_c),
+                (("unit", instr.unit.value), unit_c)]
+
+    def run(self, programs: Sequence[Sequence[Item]]) -> SimResult:
+        cfg = self.cfg
+        H = cfg.harts
+        assert len(programs) <= H, "more programs than harts"
+        busy_until: Dict[tuple, int] = {}
+        mfu_busy = 0
+        lsu_busy = 0
+        stats = [HartStats() for _ in range(H)]
+
+        # per-hart cursor state
+        next_slot = [h for h in range(H)]            # next issuable cycle
+        copro_ready = [0] * H                        # in-order SPM consistency
+        done = [not programs[h] if h < len(programs) else True
+                for h in range(H)]
+        pcs = [0] * H
+        finish = [0] * H
+
+        def hart_items(h):
+            return programs[h] if h < len(programs) else []
+
+        remaining = sum(len(hart_items(h)) for h in range(H))
+        while remaining > 0:
+            # pick the hart that can act earliest (deterministic tie-break
+            # by hart index = the harc rotation priority)
+            best_h, best_t = -1, None
+            for h in range(H):
+                items = hart_items(h)
+                if pcs[h] >= len(items):
+                    continue
+                it = items[pcs[h]]
+                t = next_slot[h]
+                if isinstance(it, Instr):
+                    # must wait for own previous coprocessor op
+                    t = max(t, copro_ready[h])
+                    for k, _dur in self._resource_holds(h, it):
+                        t = max(t, busy_until.get(k, 0))
+                    t = _align_up(t, h, H)
+                if best_t is None or t < best_t:
+                    best_h, best_t = h, t
+            h, t = best_h, best_t
+            items = hart_items(h)
+            it = items[pcs[h]]
+
+            if isinstance(it, Scalar):
+                # n scalar instructions, one per owned slot
+                end = t + (it.count - 1) * H + 1 if it.count else t
+                stats[h].instructions += it.count
+                next_slot[h] = _align_up(end, h, H)
+                finish[h] = max(finish[h], end)
+            else:
+                stats[h].instructions += 1
+                stats[h].spin_cycles += max(0, t - next_slot[h])
+                holds = self._resource_holds(h, it)
+                end = t
+                for k, dur in holds:
+                    busy_until[k] = t + dur
+                    end = max(end, t + dur)
+                if it.engine == "lsu":
+                    stats[h].lsu_ops += 1
+                    lsu_busy += end - t
+                else:
+                    stats[h].vector_ops += 1
+                    mfu_busy += end - t
+                copro_ready[h] = end
+                # issuing takes one slot; hart continues with next instr
+                next_slot[h] = _align_up(t + 1, h, H)
+                finish[h] = max(finish[h], end)
+            pcs[h] += 1
+            remaining -= 1
+
+        total = max(finish) if finish else 0
+        for h in range(H):
+            stats[h].finish_cycle = finish[h]
+        return SimResult(total, stats, mfu_busy, lsu_busy, cfg)
+
+
+def simulate(config: KlessydraConfig,
+             programs: Sequence[Sequence[Item]]) -> SimResult:
+    return Simulator(config).run(programs)

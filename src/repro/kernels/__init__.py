@@ -1,0 +1,14 @@
+"""Pallas TPU kernels implementing the paper's SPM discipline on VMEM.
+
+kvi_vops / kdotp       — the Table-1 vector ISA (fused element-wise programs,
+                         reductions with post-scaling)
+spm_matmul / spm_conv2d / spm_fft — the paper's three computation kernels
+flash_attention / ssd_scan       — the LM-scale hot spots, same discipline
+het_mimd               — composite-workload kernel (grid slot = hart,
+                         switched tile programs, dedicated VMEM blocks)
+
+Every kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, jitted
+wrapper in ops.py, pure-jnp oracle in ref.py, interpret-mode validation in
+tests/kernels/.
+"""
+from repro.kernels import ops, ref

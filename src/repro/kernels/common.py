@@ -1,0 +1,30 @@
+"""Shared kernel utilities.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True against the pure-jnp oracles in
+ref.py. The SPM discipline from the paper maps 1:1: BlockSpecs stage
+HBM->VMEM lines (kmemld), kernel bodies are fused KVI programs operating on
+VMEM-resident tiles (MFU), outputs stream back (kmemstr).
+"""
+from __future__ import annotations
+
+import jax
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_block(dim: int, preferred: int, align: int = 128) -> int:
+    """Largest hardware-aligned block <= preferred that divides dim, or dim
+    itself when it is small/unaligned (interpret-mode tests use odd sizes)."""
+    if dim <= preferred:
+        return dim
+    b = preferred
+    while b >= align:
+        if dim % b == 0:
+            return b
+        b -= align
+    return dim

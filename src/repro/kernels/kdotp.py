@@ -1,0 +1,83 @@
+"""Reduction kernels: kdotp / kdotpps / kvred (paper Table 1).
+
+Grid streams SPM-line-sized tiles through VMEM; a (1,1) accumulator scratch
+carries the partial sum across grid steps (the MFU's adder tree), the
+result is flushed once — kdotpps applies the post-scaling arithmetic shift
+at flush, exactly like the hardware writes the scaled dot product to the
+register file.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET, pick_block
+
+
+def _reduce_kernel(*refs, n_blocks: int, mul: bool, shift: int, acc_dtype):
+    if mul:
+        a_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        a_ref, o_ref, acc_ref = refs
+        b_ref = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(acc_dtype)
+    part = a * b_ref[...].astype(acc_dtype) if mul else a
+    acc_ref[0, 0] += jnp.sum(part)
+
+    @pl.when(i == n_blocks - 1)
+    def _flush():
+        r = acc_ref[0, 0]
+        if shift:
+            r = r >> jnp.asarray(shift, r.dtype) if \
+                jnp.issubdtype(acc_dtype, jnp.integer) else \
+                r / jnp.asarray(2.0 ** shift, r.dtype)
+        o_ref[0, 0] = r
+
+
+def _run_reduce(a, b, *, shift: int, block: int, interpret):
+    n = a.size
+    bl = pick_block(n, block, align=8)
+    assert n % bl == 0
+    acc_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) \
+        else jnp.float32
+    mul = b is not None
+    args = [a.reshape(n // bl, bl)] + \
+        ([b.reshape(n // bl, bl)] if mul else [])
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, n_blocks=n // bl, mul=mul,
+                          shift=shift, acc_dtype=acc_dtype),
+        grid=(n // bl,),
+        in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0)) for _ in args],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
+        interpret=INTERPRET if interpret is None else interpret,
+    )(*args)
+    return out[0, 0]
+
+
+def kdotp(a: jax.Array, b: jax.Array, *, block: int = 2048,
+          interpret: bool = None):
+    return _run_reduce(jnp.ravel(a), jnp.ravel(b), shift=0, block=block,
+                       interpret=interpret)
+
+
+def kdotpps(a: jax.Array, b: jax.Array, shift: int, *, block: int = 2048,
+            interpret: bool = None):
+    return _run_reduce(jnp.ravel(a), jnp.ravel(b), shift=shift, block=block,
+                       interpret=interpret)
+
+
+def kvred(a: jax.Array, *, block: int = 2048, interpret: bool = None):
+    return _run_reduce(jnp.ravel(a), None, shift=0, block=block,
+                       interpret=interpret)

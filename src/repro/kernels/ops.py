@@ -1,0 +1,108 @@
+"""Jitted public wrappers for the Pallas kernels — the "intrinsics" layer
+(the paper exposes its ISA as GCC intrinsics; we expose ours as jitted jax
+ops). Model code calls these; each has a matching oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kdotp as _kdotp
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kvi_vops import VOp, run_vops
+from repro.kernels.spm_conv2d import spm_conv2d
+from repro.kernels.spm_fft import spm_fft
+from repro.kernels.spm_matmul import spm_matmul
+
+
+# ---- KVI element-wise intrinsics (single-op programs) ----------------------
+
+def kaddv(a, b):
+    return run_vops([("kaddv", 2, 0, 1, 0)], [a, b])
+
+
+def ksubv(a, b):
+    return run_vops([("ksubv", 2, 0, 1, 0)], [a, b])
+
+
+def kvmul(a, b):
+    return run_vops([("kvmul", 2, 0, 1, 0)], [a, b])
+
+
+def krelu(a):
+    return run_vops([("krelu", 1, 0, None, 0)], [a])
+
+
+def ksvaddsc(a, imm: int):
+    return run_vops([("ksvaddsc", 1, 0, None, imm)], [a])
+
+
+def ksvmulsc(a, imm: int):
+    return run_vops([("ksvmulsc", 1, 0, None, imm)], [a])
+
+
+def ksrlv(a, imm: int):
+    return run_vops([("ksrlv", 1, 0, None, imm)], [a])
+
+
+def ksrav(a, imm: int):
+    return run_vops([("ksrav", 1, 0, None, imm)], [a])
+
+
+def kvslt(a, b):
+    return run_vops([("kvslt", 2, 0, 1, 0)], [a, b])
+
+
+def ksvslt(a, imm: int):
+    return run_vops([("ksvslt", 1, 0, None, imm)], [a])
+
+
+def kvcp(a):
+    return run_vops([("kvcp", 1, 0, None, 0)], [a])
+
+
+# fused example: relu(a*w + b) >> s — one HBM pass, four KVI ops in VMEM
+def fused_mac_relu(a, w, b, shift: int):
+    prog = [("kvmul", 3, 0, 1, 0),
+            ("kaddv", 3, 3, 2, 0),
+            ("ksrav", 3, 3, None, shift),
+            ("krelu", 3, 3, None, 0)]
+    return run_vops(prog, [a, w, b])
+
+
+# ---- reductions -------------------------------------------------------------
+
+kdotp = _kdotp.kdotp
+kdotpps = _kdotp.kdotpps
+kvred = _kdotp.kvred
+
+
+# ---- compute kernels --------------------------------------------------------
+
+matmul_op = jax.jit(spm_matmul, static_argnames=("bm", "bn", "bk",
+                                                 "out_dtype", "interpret"))
+conv2d_op = jax.jit(spm_conv2d, static_argnames=("shift", "block_rows",
+                                                 "interpret"))
+fft_op = jax.jit(spm_fft, static_argnames=("batch_block", "interpret"))
+attention_op = jax.jit(flash_attention,
+                       static_argnames=("causal", "window", "bq", "bk",
+                                        "q_offset", "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, A, B, C, *, chunk: int = 256, interpret=None):
+    """Model-facing wrapper: x [Bz,S,H,P], dt [Bz,S,H], A [H],
+    B/C [Bz,S,G,N] (GQA-style groups) — broadcasts groups to heads,
+    precomputes da = dt*A, calls the kernel."""
+    from repro.kernels.ssd_scan import ssd_scan
+    H = x.shape[2]
+    G = B.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    da = dt * A[None, None, :]
+    y, state = ssd_scan(x, da, dt, Bh, Ch, chunk=chunk, interpret=interpret)
+    return y, state

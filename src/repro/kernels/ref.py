@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+Where the model zoo already defines the math (attention, SSD), the oracle
+delegates to it so the kernel, the XLA dry-run path and the tests share ONE
+definition of the semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvi_vops import VOp, apply_vop
+from repro.models import ssm as ssm_lib
+from repro.models.layers import attention_ref
+
+
+def matmul_ref(a, b, out_dtype=None):
+    if a.dtype == jnp.int8:
+        return (a.astype(jnp.int32) @ b.astype(jnp.int32))
+    acc = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    return acc.astype(out_dtype or a.dtype)
+
+
+def conv2d_ref(img, filt, *, shift: int = 0):
+    H, W = img.shape
+    F = filt.shape[0]
+    pad = F // 2
+    acc_dtype = jnp.int32 if img.dtype == jnp.int32 else jnp.float32
+    padded = jnp.pad(img, ((pad, F - 1 - pad), (pad, F - 1 - pad)))
+    acc = jnp.zeros((H, W), acc_dtype)
+    for fr in range(F):
+        for fc in range(F):
+            acc = acc + padded[fr:fr + H, fc:fc + W].astype(acc_dtype) * \
+                filt[fr, fc].astype(acc_dtype)
+    if shift and jnp.issubdtype(acc_dtype, jnp.integer):
+        acc = acc >> shift
+    return acc.astype(img.dtype)
+
+
+def fft_ref(re, im):
+    x = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Kernel layout [B, H, S, hd] -> delegates to models.layers oracle."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = attention_ref(qt, kt, vt, causal=causal, window=window,
+                        q_offset=q_offset)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan_ref(x, da, dt, B, C):
+    """Kernel signature (head-broadcast B/C, da = dt*A) -> models.ssm math.
+    Returns (y, state [Bz,H,N,P])."""
+    f32 = jnp.float32
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    state = jnp.zeros((Bz, H, P, N), f32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(da[:, t].astype(f32))                       # [Bz,H]
+        upd = (dt[:, t].astype(f32)[..., None] * x[:, t].astype(f32)
+               )[..., None] * B[:, t].astype(f32)[:, :, None, :]
+        state = state * a[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, C[:, t].astype(f32))
+        ys.append(y)
+    y = jnp.stack(ys, axis=1).astype(x.dtype)                   # [Bz,S,H,P]
+    return y, state.swapaxes(-1, -2)                            # [Bz,H,N,P]
+
+
+def vops_ref(program: Sequence[VOp], inputs, out_slot: Optional[int] = None,
+             n_slots: Optional[int] = None):
+    program = tuple(program)
+    if n_slots is None:
+        n_slots = max([len(inputs)] + [o[1] + 1 for o in program])
+    if out_slot is None:
+        out_slot = program[-1][1]
+    slots = [None] * n_slots
+    for i, x in enumerate(inputs):
+        slots[i] = x
+    for op, dst, s1, s2, imm in program:
+        slots[dst] = apply_vop(op, slots[s1],
+                               slots[s2] if s2 is not None else None, imm)
+    return slots[out_slot]
+
+
+def kdotp_ref(a, b, shift: int = 0):
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        s = jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32))
+        return s >> shift if shift else s
+    s = jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+    return s / (2.0 ** shift) if shift else s
+
+
+def kvred_ref(a):
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    return jnp.sum(a.astype(acc))

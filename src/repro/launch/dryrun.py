@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes (16x16 single-pod, 2x16x16 multi-pod) and record
+memory/cost/collective analyses to artifacts/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def _run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+              overrides=None, tag: str = "") -> dict:
+    import jax
+    from repro.launch.compile import (build_cell, estimate_device_memory,
+                                      estimate_hbm_traffic, lower_cell)
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import HW, make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, overrides=overrides)
+    lowered, _ = lower_cell(cell)
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    # trip-count-aware per-device accounting from the optimized SPMD HLO
+    hlo = compiled.as_text()
+    acct = analyze_hlo(hlo, top_collectives=8)
+    flops = acct["dot_flops"]
+    hbm_bytes = acct["hbm_bytes"]
+    coll = acct["collective_bytes"]
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[{arch} {shape_name}] memory_analysis: {mem}", flush=True)
+    print(f"[{arch} {shape_name}] cost_analysis: "
+          f"flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e} "
+          f"(per-instruction-once; trip-aware totals recorded in the "
+          f"artifact)", flush=True)
+    mem_d = {
+        "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "xla_cost_flops_once": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "xla_cost_bytes_once":
+            float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+    }
+    est = estimate_device_memory(cell)
+    traffic = estimate_hbm_traffic(cell)
+
+    # roofline terms; per-device quantities / per-chip rates (DESIGN.md §5)
+    terms = {
+        "t_compute_s": flops / HW["peak_flops_bf16"],
+        "t_memory_s": traffic["total"] / HW["hbm_bw"],
+        "t_memory_hlo_upper_s": hbm_bytes / HW["hbm_bw"],
+        "t_collective_s": coll["total"] / HW["ici_bw"],
+    }
+    terms["bottleneck"] = max(
+        ["t_compute_s", "t_memory_s", "t_collective_s"],
+        key=lambda k: terms[k])
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "chips": int(n_chips), "tag": tag,
+        "kind": cell.shape.kind,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll,
+        "top_collectives": acct.get("top_collectives", []),
+        "memory_analysis": mem_d,
+        "estimated_device_memory": est,
+        "hbm_traffic_model": traffic,
+        "per_device_live_bytes": est["total"],
+        "fits_hbm": bool(est["total"] < HW["hbm_bytes"]),
+        "roofline": terms,
+        "downgrades": [list(map(str, d)) for d in cell.rules.downgrades],
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "status": "ok",
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    pod = "multipod" if multi_pod else "pod"
+    name = f"{arch}_{shape_name}_{pod}{('_' + tag) if tag else ''}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--override", action="append", default=[],
+                    help="key=value Parallelism/ModelConfig override")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    from repro.configs import all_cells, arch_cells
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch, "--arch required without --all"
+        cells = arch_cells(args.arch) if not args.shape else \
+            [(args.arch, args.shape)]
+
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    out_dir = Path(args.out)
+    failures = []
+    for arch, shape in cells:
+        for mp in pods:
+            pod = "multipod" if mp else "pod"
+            fname = out_dir / f"{arch}_{shape}_{pod}{('_' + args.tag) if args.tag else ''}.json"
+            if args.skip_existing and fname.exists():
+                prev = json.loads(fname.read_text())
+                if prev.get("status") == "ok":
+                    print(f"SKIP {arch} {shape} {pod} (cached)")
+                    continue
+            label = f"{arch} {shape} {pod}"
+            try:
+                rec = _run_cell(arch, shape, mp, out_dir,
+                                overrides=overrides or None, tag=args.tag)
+                r = rec["roofline"]
+                print(f"OK   {label}: compile={rec['t_compile_s']}s "
+                      f"flops/dev={rec['flops_per_device']:.3e} "
+                      f"est/dev={rec['per_device_live_bytes']/2**30:.2f}GiB "
+                      f"fits={rec['fits_hbm']} "
+                      f"[comp={r['t_compute_s']:.4f}s mem={r['t_memory_s']:.4f}s "
+                      f"coll={r['t_collective_s']:.4f}s -> {r['bottleneck']}]",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record & continue sweep
+                failures.append(label)
+                out_dir.mkdir(parents=True, exist_ok=True)
+                fname.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "status": "fail",
+                     "error": traceback.format_exc()}, indent=2))
+                print(f"FAIL {label}: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        return 1
+    print("\nALL CELLS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

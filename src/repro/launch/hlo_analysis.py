@@ -1,0 +1,267 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's builtin ``compiled.cost_analysis()`` visits every instruction ONCE —
+a `lax.scan` over 64 layers reports 1/64th of the real FLOPs. This module
+parses the *optimized per-device* HLO text (``compiled.as_text()``), walks
+the call graph (fusions, while bodies with ``known_trip_count``,
+conditionals) and produces:
+
+  * dot_flops        — 2 * result_elems * contracted_elems per dot op
+  * hbm_bytes        — Σ (result + operand bytes) at fusion granularity,
+                       a TPU-like HBM-traffic proxy (fusion internals free)
+  * collective_bytes — per collective kind, operand bytes (wire-byte proxy)
+
+All quantities are per-device (the HLO is the per-device SPMD program).
+Validated in tests against jax's cost_analysis on loop-free programs.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{|"
+                          r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s+\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"\b(?:calls|to_apply|body)=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"\bcondition=(%[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"(%[\w\.\-]+)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no HBM data
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "add-dependency", "custom-call", "partition-id",
+             "replica-id", "iota"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems_first(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result_text: str
+    opcode: str
+    rest: str          # everything after '(' — operands + attrs
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.result_text)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # name -> result text
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVES})
+    # attribution: (kind, total_bytes_incl_trips, op_name_metadata)
+    coll_items: List[tuple] = field(default_factory=list)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        for kind, b, name in other.coll_items:
+            self.coll_items.append((kind, b * mult, name))
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        stripped = line.strip()
+        # computation header: "%name (args) -> type {" possibly with ENTRY
+        if (line.startswith("%") or line.startswith("ENTRY")) and \
+                line.endswith("{"):
+            name = line.split()[1] if line.startswith("ENTRY") else \
+                line.split()[0]
+            name = name.split("(")[0].strip()
+            cur = Computation(name)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_text, opcode, rest = m.groups()
+        cur.instrs.append(Instr(name, result_text, opcode, rest))
+        cur.shapes[name] = result_text
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """operand list = %names inside the first balanced paren group."""
+    depth = 1
+    out = []
+    i = 0
+    while i < len(rest) and depth > 0:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    inner = rest[:i - 1] if depth == 0 else rest
+    return _OPERAND_RE.findall(inner)
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    ops = _operand_names(instr.rest)
+    if not ops:
+        return 0.0
+    lhs_text = comp.shapes.get(ops[0], "")
+    lhs_dims = _shape_elems_first(lhs_text) or []
+    mc = _DOT_CONTRACT_RE.search(instr.rest)
+    contracted = 1
+    if mc and lhs_dims:
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    res_dims = _shape_elems_first(instr.result_text) or []
+    res_elems = 1
+    for d in res_dims:
+        res_elems *= d
+    return 2.0 * res_elems * contracted
+
+
+def _analyze_comp(comp_name: str, comps: Dict[str, Computation],
+                  memo: Dict[str, Totals], inside_fusion: bool) -> Totals:
+    key = comp_name + ("#f" if inside_fusion else "")
+    if key in memo:
+        return memo[key]
+    comp = comps.get(comp_name)
+    t = Totals()
+    memo[key] = t
+    if comp is None:
+        return t
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "dot":
+            t.flops += _dot_flops(ins, comp)
+            if not inside_fusion:
+                t.hbm_bytes += ins.result_bytes + sum(
+                    _shape_bytes(comp.shapes.get(o, ""))
+                    for o in _operand_names(ins.rest))
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES:
+            operand_bytes = sum(_shape_bytes(comp.shapes.get(o, ""))
+                                for o in _operand_names(ins.rest))
+            b = operand_bytes or ins.result_bytes
+            t.coll[base] += b
+            mname = re.search(r'op_name="([^"]*)"', ins.rest)
+            t.coll_items.append((base, b, mname.group(1) if mname else "?"))
+            if not inside_fusion:
+                t.hbm_bytes += ins.result_bytes + operand_bytes
+            continue
+        if op == "while":
+            body = _CALLS_RE.search(ins.rest)
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            if body:
+                t.add(_analyze_comp(body.group(1), comps, memo, False), trip)
+            continue
+        if op in ("fusion", "call", "async-start"):
+            called = _CALLS_RE.search(ins.rest)
+            if called:
+                sub = _analyze_comp(called.group(1), comps, memo,
+                                    op == "fusion")
+                t.add(sub, 1.0)
+            if not inside_fusion:
+                t.hbm_bytes += ins.result_bytes + sum(
+                    _shape_bytes(comp.shapes.get(o, ""))
+                    for o in _operand_names(ins.rest))
+            continue
+        if op == "conditional":
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                subs = [_analyze_comp(b.strip(), comps, memo, False)
+                        for b in mb.group(1).split(",")]
+                if subs:
+                    best = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                    t.add(best, 1.0)
+            continue
+        if op in _FREE_OPS:
+            continue
+        if not inside_fusion:
+            t.hbm_bytes += ins.result_bytes + sum(
+                _shape_bytes(comp.shapes.get(o, ""))
+                for o in _operand_names(ins.rest))
+    return t
+
+
+def analyze_hlo(hlo_text: str, top_collectives: int = 0) -> dict:
+    comps = parse_module(hlo_text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[str, Totals] = {}
+    t = _analyze_comp(comps["__entry__"].name, comps, memo, False)
+    out = {
+        "dot_flops": t.flops,
+        "hbm_bytes": t.hbm_bytes,
+        "collective_bytes": dict(t.coll, total=t.coll_total),
+    }
+    if top_collectives:
+        items = sorted(t.coll_items, key=lambda x: -x[1])[:top_collectives]
+        out["top_collectives"] = [
+            {"kind": k, "bytes": b, "op": n[-160:]} for k, b, n in items]
+    return out

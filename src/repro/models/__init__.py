@@ -1,0 +1,1 @@
+from repro.models import layers, model_zoo, moe, params, sharding, ssm, steps

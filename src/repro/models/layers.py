@@ -1,0 +1,224 @@
+"""Core NN layers: RMSNorm, RoPE, chunked (flash-style) attention on the XLA
+path, decode attention over full / ring (sliding-window) KV caches, SwiGLU.
+
+The chunked attention here is the *oracle semantics* shared with the Pallas
+``flash_attention`` kernel (kernels/flash_attention.py): online softmax over
+KV blocks, f32 accumulators, optional causal & sliding-window masking. The
+dry-run lowers this XLA path so cost_analysis reflects the true math; real
+TPU execution swaps in the Pallas kernel (same math, VMEM-tiled like the
+paper's SPM-resident vector ops).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x@Wg) * (x@Wu) @ Wd; weights may be bf16-cast."""
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32)[..., None, :] * freqs
+    # angles: [..., S, 1, hd/2] broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (XLA path / kernel oracle)
+# ---------------------------------------------------------------------------
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    """[Qb, Kb] bool valid mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 1024, kv_block: int = 1024,
+                        q_offset: int = 0, swa_block_skip: bool = False,
+                        repeat_kv: bool = False):
+    """Online-softmax attention, chunked over Q and KV blocks.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd] with H = KV * G (GQA).
+    Returns [B, Sq, H, hd]. All softmax state in f32.
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+
+    ``swa_block_skip`` (§Perf): with a sliding window, each query block
+    only attends to the last ``window + q_block`` keys — slice that range
+    per query block instead of scanning the full sequence (exact: masking
+    still applies; a true FLOP reduction of Skv/(window+q_block)).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if repeat_kv and G > 1:
+        # §Perf: materialize K/V at H heads so the score einsum stays
+        # head-sharded end to end (the [KV, G] reshape otherwise makes the
+        # SPMD partitioner reshard per KV block: all-to-all inside the scan)
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        KV, G = H, 1
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = 1.0 / np.sqrt(hd)
+
+    skip = (swa_block_skip and window and causal and
+            window + q_block < Skv)
+    if skip:
+        span = int(np.ceil((window + q_block) / kv_block)) * kv_block
+        nk_eff = span // kv_block
+    else:
+        nk_eff = nk
+
+    qb = q.reshape(B, nq, q_block, KV, G, hd)
+    kb = k.reshape(B, nk, kv_block, KV, hd)
+    vb = v.reshape(B, nk, kv_block, KV, hd)
+
+    def per_qblock(qi, q_tile):
+        # q_tile: [B, Qb, KV, G, hd]
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+        if skip:
+            # only the last `span` keys can be visible to this query block
+            start = jnp.clip(qi * q_block + q_block - span, 0, Skv - span)
+            k_span = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            v_span = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kb_l = k_span.reshape(B, nk_eff, kv_block, KV, hd)
+            vb_l = v_span.reshape(B, nk_eff, kv_block, KV, hd)
+            pos0 = start
+        else:
+            kb_l, vb_l = kb, vb
+            pos0 = 0
+
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            ki, k_tile, v_tile = inputs
+            k_pos = pos0 + ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", q_tile.astype(jnp.float32),
+                           k_tile.astype(jnp.float32)) * scale
+            mask = _block_mask(q_pos, k_pos, causal, window)  # [Qb, Kb] 2D
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            # guard fully-masked blocks: exp(NEG_INF - NEG_INF) would be 1
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            correction = jnp.exp(m_prev - m_new)
+            l_new = l_prev * correction + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p, v_tile.astype(jnp.float32))
+            acc = acc * correction[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk_eff),
+                                    kb_l.swapaxes(0, 1),
+                                    vb_l.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # [B,KV,G,Qb,hd]
+        return out.transpose(0, 3, 1, 2, 4)               # [B,Qb,KV,G,hd]
+
+    outs = jax.lax.map(lambda args: per_qblock(*args),
+                       (jnp.arange(nq), qb.swapaxes(0, 1)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Quadratic reference (small shapes only) — oracle for tests."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qr, k.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = _block_mask(q_pos, k_pos, causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                     window: int = 0):
+    """q: [B, 1, H, hd]; caches: [B, S, KV, hd];
+    cache_positions: [B, S] int32 absolute token position per slot (-1 =
+    empty); pos: [B] int32 per-sequence current position (continuous
+    batching: slots decode at different depths). Works for both full caches
+    (slot i holds position i) and ring buffers (slot = pos % window)."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+    if window:
+        valid &= cache_positions > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_update(k_cache, v_cache, cache_positions, k_new, v_new, pos, *,
+                 window: int = 0):
+    """Insert one token's K/V per sequence at that sequence's slot.
+    pos: [B]. Full cache: slot = pos. Ring (SWA): slot = pos % window."""
+    B, S = k_cache.shape[:2]
+    slot = (pos % window) if window else pos
+    slot = jnp.clip(slot.astype(jnp.int32), 0, S - 1)
+    b_ix = jnp.arange(B)
+    k_cache = k_cache.at[b_ix, slot].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b_ix, slot].set(v_new[:, 0].astype(v_cache.dtype))
+    cache_positions = cache_positions.at[b_ix, slot].set(
+        pos.astype(jnp.int32))
+    return k_cache, v_cache, cache_positions

@@ -1,0 +1,516 @@
+"""Model zoo: parameter templates + forward passes for all assigned families.
+
+Families: dense (llama/deepseek/stablelm/phi3), moe (mixtral/grok),
+ssm (mamba2), hybrid (hymba: parallel attn+SSM heads), audio (enc-dec,
+frame-embedding stub frontend), vlm (decoder + patch-embedding stub).
+
+All decoders share one scanned block driver; the per-family block bodies
+dispatch on cfg.family. Layers are stacked along a leading "layers" axis and
+consumed as `lax.scan` xs (compact HLO => fast 512-device SPMD compiles).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, Parallelism, ShapeConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, cache_update, decode_attention,
+                                 flash_attention_xla, rms_norm, swiglu)
+from repro.models.params import P
+from repro.models.sharding import Rules
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# parameter templates
+# ---------------------------------------------------------------------------
+
+def _attn_template(cfg: ModelConfig, L: int, prefix_dims=()) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lay = ("layers",) + tuple(None for _ in prefix_dims[1:])
+    pd = (L,) + tuple(prefix_dims[1:])
+    return {
+        "wq": P(pd + (D, H, hd), lay + ("embed", "heads", "head_dim"),
+                "fanin", fan_in=D),
+        "wk": P(pd + (D, KV, hd), lay + ("embed", "kv_heads", "head_dim"),
+                "fanin", fan_in=D),
+        "wv": P(pd + (D, KV, hd), lay + ("embed", "kv_heads", "head_dim"),
+                "fanin", fan_in=D),
+        "wo": P(pd + (H, hd, D), lay + ("heads", "head_dim", "embed"),
+                "fanin", fan_in=H * hd),
+    }
+
+
+def _ffn_template(cfg: ModelConfig, L: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": P((L, D, F), ("layers", "embed", "mlp"), "fanin", fan_in=D),
+        "w_up": P((L, D, F), ("layers", "embed", "mlp"), "fanin", fan_in=D),
+        "w_down": P((L, F, D), ("layers", "mlp", "embed"), "fanin", fan_in=F),
+    }
+
+
+def _moe_template(cfg: ModelConfig, L: int) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": P((L, D, E), ("layers", "embed", None), "fanin", fan_in=D),
+        "w_gate": P((L, E, D, F), ("layers", "experts", "embed", "mlp"),
+                    "fanin", fan_in=D),
+        "w_up": P((L, E, D, F), ("layers", "experts", "embed", "mlp"),
+                  "fanin", fan_in=D),
+        "w_down": P((L, E, F, D), ("layers", "experts", "mlp", "embed"),
+                    "fanin", fan_in=F),
+    }
+
+
+def _ssm_template(cfg: ModelConfig, L: int) -> dict:
+    D, di = cfg.d_model, cfg.d_inner
+    H, N, G, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    gn = G * N
+    return {
+        "w_z": P((L, D, di), ("layers", "embed", "ssm_dim"), "fanin", fan_in=D),
+        "w_x": P((L, D, di), ("layers", "embed", "ssm_dim"), "fanin", fan_in=D),
+        "w_B": P((L, D, gn), ("layers", "embed", None), "fanin", fan_in=D),
+        "w_C": P((L, D, gn), ("layers", "embed", None), "fanin", fan_in=D),
+        "w_dt": P((L, D, H), ("layers", "embed", "ssm_heads"), "fanin",
+                  fan_in=D),
+        "conv_x": P((L, K, di), ("layers", "conv", "ssm_dim"), "normal"),
+        "conv_B": P((L, K, gn), ("layers", "conv", None), "normal"),
+        "conv_C": P((L, K, gn), ("layers", "conv", None), "normal"),
+        "A_log": P((L, H), ("layers", "ssm_heads"), "ssm_a"),
+        "dt_bias": P((L, H), ("layers", "ssm_heads"), "ssm_dt"),
+        "D_skip": P((L, H), ("layers", "ssm_heads"), "ones"),
+        "gate_norm": P((L, di), ("layers", "ssm_dim"), "zeros"),
+        "w_out": P((L, di, D), ("layers", "ssm_dim", "embed"), "fanin"),
+    }
+
+
+def block_template(cfg: ModelConfig, L: Optional[int] = None) -> dict:
+    L = cfg.num_layers if L is None else L
+    D = cfg.d_model
+    t = {"ln1": P((L, D), ("layers", None), "zeros")}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        t["attn"] = _attn_template(cfg, L, (L,))
+        t["ln2"] = P((L, D), ("layers", None), "zeros")
+        t["ffn" if fam != "moe" else "moe"] = (
+            _moe_template(cfg, L) if fam == "moe" else _ffn_template(cfg, L))
+    elif fam == "ssm":
+        t["ssm"] = _ssm_template(cfg, L)
+    elif fam == "hybrid":
+        t["attn"] = _attn_template(cfg, L, (L,))
+        t["ssm"] = _ssm_template(cfg, L)
+        t["attn_scale"] = P((L, D), ("layers", None), "zeros")
+        t["ssm_scale"] = P((L, D), ("layers", None), "zeros")
+        t["ln2"] = P((L, D), ("layers", None), "zeros")
+        t["ffn"] = _ffn_template(cfg, L)
+    else:
+        raise ValueError(fam)
+    return t
+
+
+def encdec_block_template(cfg: ModelConfig) -> dict:
+    """Decoder block with cross-attention (audio family)."""
+    L, D = cfg.num_layers, cfg.d_model
+    return {
+        "ln1": P((L, D), ("layers", None), "zeros"),
+        "attn": _attn_template(cfg, L, (L,)),
+        "ln_x": P((L, D), ("layers", None), "zeros"),
+        "xattn": _attn_template(cfg, L, (L,)),
+        "ln2": P((L, D), ("layers", None), "zeros"),
+        "ffn": _ffn_template(cfg, L),
+    }
+
+
+def _apply_param_dtype(t, dtype: str):
+    """Templates default to f32; serving cells store bf16 weights."""
+    if dtype == "float32":
+        return t
+    return jax.tree_util.tree_map(
+        lambda p: P(p.shape, p.axes, p.init, dtype, p.fan_in)
+        if p.dtype == "float32" else p,
+        t, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_template(cfg: ModelConfig) -> dict:
+    D, Vp = cfg.d_model, padded_vocab(cfg.vocab_size)
+    t = {"embed": P((Vp, D), ("vocab", "embed"), "embed"),
+         "final_norm": P((D,), (None,), "zeros")}
+    if cfg.family == "audio":
+        t["frontend_adapter"] = P((D, D), ("embed", None), "fanin")
+        enc = {
+            "ln1": P((cfg.encoder_layers, D), ("layers", None), "zeros"),
+            "attn": _attn_template(cfg, cfg.encoder_layers, (cfg.encoder_layers,)),
+            "ln2": P((cfg.encoder_layers, D), ("layers", None), "zeros"),
+            "ffn": {k: P((cfg.encoder_layers,) + v.shape[1:], v.axes, v.init,
+                         v.dtype, v.fan_in)
+                    for k, v in _ffn_template(cfg, cfg.encoder_layers).items()},
+        }
+        t["enc_blocks"] = enc
+        t["enc_norm"] = P((D,), (None,), "zeros")
+        t["blocks"] = encdec_block_template(cfg)
+    else:
+        t["blocks"] = block_template(cfg)
+        if cfg.family == "vlm":
+            t["patch_adapter"] = P((D, D), ("embed", None), "fanin")
+    if not cfg.tie_embeddings:
+        t["unembed"] = P((D, Vp), ("embed", "vocab"), "fanin")
+    return _apply_param_dtype(t, cfg.param_dtype)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    from repro.models.params import count_params
+    return count_params(param_template(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k of E experts)."""
+    n = param_count(cfg)
+    if cfg.num_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.num_layers
+        n -= (cfg.num_experts - cfg.num_experts_per_tok) * expert
+    return n
+
+
+# ---------------------------------------------------------------------------
+# block forward bodies
+# ---------------------------------------------------------------------------
+
+def _cast(w, dtype):
+    return w.astype(dtype)
+
+
+def _attn_forward(lp, x, positions, cfg: ModelConfig, rules: Rules, par,
+                  *, causal=True, window=0, kv_override=None):
+    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, _cast(lp["wq"], dtype))
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, _cast(lp["wk"], dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, _cast(lp["wv"], dtype))
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:  # cross-attention: kv computed from encoder output
+        enc = kv_override
+        k = jnp.einsum("bsd,dhk->bshk", enc, _cast(lp["wk"], dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc, _cast(lp["wv"], dtype))
+    q = apply_rope(q, positions, cfg.rope_theta) if kv_override is None else q
+    q = rules.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = rules.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    out = flash_attention_xla(
+        q, k, v, causal=causal, window=window,
+        q_block=par.attn_q_block, kv_block=par.attn_kv_block,
+        swa_block_skip=par.swa_block_skip, repeat_kv=par.attn_repeat_kv)
+    out = jnp.einsum("bshk,hkd->bsd", out, _cast(lp["wo"], dtype))
+    return out, (k, v)
+
+
+def _ffn_forward(lp, x, cfg, rules):
+    h = swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return h
+
+
+def _ssm_forward(lp, x, cfg: ModelConfig, rules: Rules, conv_state=None,
+                 ssd_state=None, decode=False):
+    """Full mamba2 mixer. x: [B,S,D]. Returns (y, (conv_state, ssd_state))."""
+    dtype = x.dtype
+    B_, S, D = x.shape
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    z = jnp.einsum("bsd,de->bse", x, _cast(lp["w_z"], dtype))
+    xin = jnp.einsum("bsd,de->bse", x, _cast(lp["w_x"], dtype))
+    Bp = jnp.einsum("bsd,de->bse", x, _cast(lp["w_B"], dtype))
+    Cp = jnp.einsum("bsd,de->bse", x, _cast(lp["w_C"], dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, _cast(lp["w_dt"], dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+
+    cs_x = cs_B = cs_C = None
+    if conv_state is not None:
+        di, gn = cfg.d_inner, G * N
+        cs_x, cs_B, cs_C = (conv_state[..., :di], conv_state[..., di:di + gn],
+                            conv_state[..., di + gn:])
+    xin, ns_x = ssm_lib.causal_conv(xin, lp["conv_x"], cs_x)
+    Bp, ns_B = ssm_lib.causal_conv(Bp, lp["conv_B"], cs_B)
+    Cp, ns_C = ssm_lib.causal_conv(Cp, lp["conv_C"], cs_C)
+    xin, Bp, Cp = jax.nn.silu(xin), jax.nn.silu(Bp), jax.nn.silu(Cp)
+    new_conv = jnp.concatenate([ns_x, ns_B, ns_C], axis=-1)
+
+    xh = xin.reshape(B_, S, H, Pd)
+    xh = rules.constrain(xh, "batch", "seq", "ssm_heads", None)
+    Bh = Bp.reshape(B_, S, G, N)
+    Ch = Cp.reshape(B_, S, G, N)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+
+    if decode:
+        y, new_state = ssm_lib.ssd_decode_step(
+            ssd_state, xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0])
+        y = y[:, None]
+    else:
+        y, new_state = ssm_lib.ssd_chunked(
+            xh, dt, A, Bh, Ch, chunk=min(cfg.ssm_chunk, S),
+            initial_state=ssd_state)
+    y = y + xh * lp["D_skip"].astype(jnp.float32)[None, None, :, None].astype(dtype)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype),
+                 lp["gate_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, _cast(lp["w_out"], dtype))
+    return y, (new_conv.astype(x.dtype), new_state)
+
+
+# ---------------------------------------------------------------------------
+# decoder driver (train / prefill / decode) for non-encdec families
+# ---------------------------------------------------------------------------
+
+def _decoder_block(lp, x, positions, cfg, rules, par, cache_in=None,
+                   decode=False):
+    """One block. Returns (x, cache_out, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window
+    cache_out = {}
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if cfg.family == "ssm":
+        y, (conv_s, ssd_s) = _ssm_forward(
+            lp["ssm"], h, cfg, rules,
+            conv_state=None if cache_in is None else cache_in["conv"],
+            ssd_state=None if cache_in is None else cache_in["state"],
+            decode=decode)
+        x = x + y
+        cache_out = {"conv": conv_s, "state": ssd_s}
+        x = rules.constrain(x, "batch", "seq_sp", None)
+        return x, cache_out, aux
+
+    # --- attention path (dense / moe / vlm / hybrid) ---
+    if decode:
+        dtype = h.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wq"], dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wk"], dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wv"], dtype))
+        pos = positions[:, 0]                          # [B] per-slot position
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc, vc, cpos = cache_update(
+            cache_in["k"], cache_in["v"], cache_in["cpos"], k, v, pos,
+            window=window)
+        att = decode_attention(q, kc, vc, cpos, pos, window=window)
+        attn_out = jnp.einsum("bshk,hkd->bsd", att,
+                              _cast(lp["attn"]["wo"], dtype))
+        cache_out = {"k": kc, "v": vc, "cpos": cpos}
+        kv = None
+    else:
+        attn_out, kv = _attn_forward(lp["attn"], h, positions, cfg, rules,
+                                     par, causal=True, window=window)
+
+    if cfg.family == "hybrid":
+        ssm_cache = None if cache_in is None else cache_in
+        y_ssm, (conv_s, ssd_s) = _ssm_forward(
+            lp["ssm"], h, cfg, rules,
+            conv_state=None if cache_in is None else cache_in["conv"],
+            ssd_state=None if cache_in is None else cache_in["state"],
+            decode=decode)
+        # parallel heads: average of per-path normalized outputs
+        y = 0.5 * (rms_norm(attn_out, lp["attn_scale"], cfg.norm_eps) +
+                   rms_norm(y_ssm, lp["ssm_scale"], cfg.norm_eps))
+        cache_out.update({"conv": conv_s, "state": ssd_s})
+    else:
+        y = attn_out
+
+    x = x + y
+    x = rules.constrain(x, "batch", "seq_sp", None)
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_lib.moe_ffn(
+            h2, lp["moe"], num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok, cap_factor=cfg.capacity_factor,
+            rules=rules, whole_batch_group=par.moe_decode_group and decode)
+    else:
+        ff = _ffn_forward(lp["ffn"], h2, cfg, rules)
+    x = x + ff
+    x = rules.constrain(x, "batch", "seq_sp", None)
+
+    if not decode and kv is not None and cache_in is not None:
+        # prefill: store kv into the cache — last `window` tokens for ring
+        # caches, or all tokens + empty headroom slots for full caches
+        S_slots = cache_in["k"].shape[1]
+        S = kv[0].shape[1]
+        B = kv[0].shape[0]
+        k, v = kv
+        if S_slots <= S:               # ring (SWA) cache: keep the tail,
+            # placed so that position p sits at slot p % W (the decode
+            # eviction invariant; matters when W does not divide S)
+            shift = (S - S_slots) % S_slots
+            kk = jnp.roll(k[:, -S_slots:], shift, axis=1)
+            vv = jnp.roll(v[:, -S_slots:], shift, axis=1)
+            cpos = jnp.broadcast_to(
+                jnp.roll(jnp.arange(S, dtype=jnp.int32)[-S_slots:], shift),
+                (B, S_slots))
+        else:                          # full cache with generation headroom
+            pad = S_slots - S
+            kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cpos = jnp.broadcast_to(jnp.concatenate(
+                [jnp.arange(S, dtype=jnp.int32),
+                 jnp.full((pad,), -1, jnp.int32)]), (B, S_slots))
+        cache_out.update({"k": kk.astype(cache_in["k"].dtype),
+                          "v": vv.astype(cache_in["v"].dtype),
+                          "cpos": cpos})
+    return x, cache_out, aux
+
+
+def decoder_forward(params, cfg: ModelConfig, rules: Rules, par: Parallelism,
+                    x, positions, cache=None, decode=False):
+    """x: [B,S,D] embedded input. Returns (hidden, new_layer_cache, aux)."""
+    blocks = params["blocks"]
+
+    def body(carry, xs):
+        xcur, aux_acc = carry
+        lp, cache_l = xs if cache is not None else (xs, None)
+        xcur, cache_out, aux = _decoder_block(
+            lp, xcur, positions, cfg, rules, par, cache_in=cache_l,
+            decode=decode)
+        return (xcur, aux_acc + aux), cache_out
+
+    if par.remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif par.remat == "block":
+        body = jax.checkpoint(body)
+
+    xs = (blocks, cache["layers"]) if cache is not None else blocks
+    (x, aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_layer_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder driver (audio family)
+# ---------------------------------------------------------------------------
+
+def encoder_forward(params, cfg, rules, par, frames):
+    """frames: [B, S_enc, D] stub embeddings -> encoder hidden states."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.einsum("bsd,de->bse", frames.astype(dtype),
+                   params["frontend_adapter"].astype(dtype))
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                                 frames.shape[:2])
+
+    def body(xcur, lp):
+        h = rms_norm(xcur, lp["ln1"], cfg.norm_eps)
+        att, _ = _attn_forward(lp["attn"], h, positions, cfg, rules, par,
+                               causal=False)
+        xcur = xcur + att
+        h2 = rms_norm(xcur, lp["ln2"], cfg.norm_eps)
+        xcur = xcur + _ffn_forward(lp["ffn"], h2, cfg, rules)
+        xcur = rules.constrain(xcur, "batch", "seq_sp", None)
+        return xcur, None
+
+    if par.remat in ("block", "full"):
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_decoder_forward(params, cfg, rules, par, x, positions, enc_out,
+                           cache=None, decode=False):
+    """Decoder with self + cross attention. enc_out: [B,S_enc,D] (train) or
+    None (decode: cross K/V live in the cache)."""
+
+    def body(carry, xs):
+        xcur, aux = carry
+        lp, cache_l = xs if cache is not None else (xs, None)
+        cache_out = {}
+        h = rms_norm(xcur, lp["ln1"], cfg.norm_eps)
+        if decode:
+            dtype = h.dtype
+            q = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wq"], dtype))
+            k = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wk"], dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h, _cast(lp["attn"]["wv"], dtype))
+            pos = positions[:, 0]                      # [B]
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kc, vc, cpos = cache_update(cache_l["k"], cache_l["v"],
+                                        cache_l["cpos"], k, v, pos)
+            att = decode_attention(q, kc, vc, cpos, pos)
+            att = jnp.einsum("bshk,hkd->bsd", att, _cast(lp["attn"]["wo"], dtype))
+            cache_out.update({"k": kc, "v": vc, "cpos": cpos})
+            xcur = xcur + att
+            # cross-attention against cached encoder K/V
+            hx = rms_norm(xcur, lp["ln_x"], cfg.norm_eps)
+            qx = jnp.einsum("bsd,dhk->bshk", hx, _cast(lp["xattn"]["wq"], dtype))
+            B_, n_enc = q.shape[0], cache_l["xk"].shape[1]
+            xpos = jnp.broadcast_to(jnp.arange(n_enc, dtype=jnp.int32),
+                                    (B_, n_enc))
+            attx = decode_attention(qx, cache_l["xk"], cache_l["xv"], xpos,
+                                    jnp.full((B_,), n_enc, jnp.int32))
+            attx = jnp.einsum("bshk,hkd->bsd", attx,
+                              _cast(lp["xattn"]["wo"], dtype))
+            cache_out.update({"xk": cache_l["xk"], "xv": cache_l["xv"]})
+            xcur = xcur + attx
+        else:
+            att, kv = _attn_forward(lp["attn"], h, positions, cfg, rules, par,
+                                    causal=True)
+            xcur = xcur + att
+            hx = rms_norm(xcur, lp["ln_x"], cfg.norm_eps)
+            attx, xkv = _attn_forward(lp["xattn"], hx, positions, cfg, rules,
+                                      par, causal=False, kv_override=enc_out)
+            xcur = xcur + attx
+            if cache_l is not None:
+                B_, Sd = kv[0].shape[:2]
+                pad = cache_l["k"].shape[1] - Sd
+                cache_out.update({
+                    "k": jnp.pad(kv[0], ((0, 0), (0, pad), (0, 0), (0, 0))
+                                 ).astype(cache_l["k"].dtype),
+                    "v": jnp.pad(kv[1], ((0, 0), (0, pad), (0, 0), (0, 0))
+                                 ).astype(cache_l["v"].dtype),
+                    "cpos": jnp.broadcast_to(jnp.concatenate(
+                        [jnp.arange(Sd, dtype=jnp.int32),
+                         jnp.full((pad,), -1, jnp.int32)]), (B_, Sd + pad)),
+                    "xk": xkv[0].astype(cache_l["xk"].dtype),
+                    "xv": xkv[1].astype(cache_l["xv"].dtype)})
+        h2 = rms_norm(xcur, lp["ln2"], cfg.norm_eps)
+        xcur = xcur + _ffn_forward(lp["ffn"], h2, cfg, rules)
+        xcur = rules.constrain(xcur, "batch", "seq_sp", None)
+        return (xcur, aux), cache_out
+
+    if par.remat in ("block", "full"):
+        body = jax.checkpoint(body)
+    xs = (params["blocks"], cache["layers"]) if cache is not None \
+        else params["blocks"]
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    return params["embed"].astype(dtype)[tokens]
+
+
+def logits_fn(params, cfg, hidden):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(dtype)
+        logits = jnp.einsum("bsd,vd->bsv", hidden, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden, params["unembed"].astype(dtype))
+    Vp, V = padded_vocab(cfg.vocab_size), cfg.vocab_size
+    if Vp != V:
+        mask = jnp.arange(Vp) < V
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    return logits

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts with gather/scatter (FLOP-free) capacity dispatch.
+
+GShard-style einsum dispatch costs G*S*E*C*D matmul FLOPs — at 32k sequences
+that *dwarfs* the expert FLOPs, so we dispatch with integer scatter/gather
+instead: FLOPs stay proportional to tokens x top_k x 3 x D x F (true MoE
+scaling, capacity overhead = capacity_factor).
+
+Token groups are per-sequence ([B, S, D] with B sharded over data/pod), so
+routing cumsums never cross shards — SPMD-friendly by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def capacity(seq_len: int, num_experts: int, top_k: int, factor: float) -> int:
+    c = int(np.ceil(seq_len * top_k * factor / num_experts))
+    return max(8, int(np.ceil(c / 8)) * 8)   # pad to 8 for TPU-friendly tiles
+
+
+def route(x, w_router, num_experts: int, top_k: int):
+    """x: [B, S, D] -> (weights [B,S,k] f32, idx [B,S,k] int32, aux_loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux loss
+    me = probs.mean(axis=(0, 1))                       # [E]
+    ce = jnp.zeros_like(me).at[idx.reshape(-1)].add(
+        1.0 / idx.size)                                # fraction routed per e
+    aux = num_experts * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def dispatch_indices(idx, num_experts: int, cap: int):
+    """Per-group slot assignment.
+
+    idx: [B, S, k] expert choice per token. Returns
+      slot_token [B, E, C] int32 — which flat token (s*k+j expanded) fills
+        each (expert, slot); 0 where empty (masked separately),
+      slot_valid [B, E, C] bool,
+      token_slot [B, S, k] int32 — the slot each (token, choice) landed in
+        (>= C means dropped).
+    """
+    B, S, k = idx.shape
+    flat = idx.reshape(B, S * k)                               # expert per entry
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # [B, S*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # pos within expert
+    token_slot = jnp.take_along_axis(pos, flat[..., None], axis=-1)[..., 0]
+    keep = token_slot < cap
+    # scatter: slot_token[b, e, c] = entry index t where (flat[t]==e, pos==c)
+    entry_ids = jnp.broadcast_to(jnp.arange(S * k)[None], (B, S * k))
+    slot_token = jnp.zeros((B, num_experts, cap), jnp.int32)
+    slot_valid = jnp.zeros((B, num_experts, cap), jnp.bool_)
+    b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    e_ix = flat
+    c_ix = jnp.where(keep, token_slot, cap - 1)  # clamp; masked by valid
+    slot_token = slot_token.at[b_ix, e_ix, c_ix].max(
+        jnp.where(keep, entry_ids, 0), mode="drop")
+    slot_valid = slot_valid.at[b_ix, e_ix, c_ix].max(keep, mode="drop")
+    return slot_token, slot_valid, token_slot.reshape(B, S, k)
+
+
+def moe_ffn(x, params, *, num_experts: int, top_k: int, cap_factor: float,
+            rules=None, whole_batch_group: bool = False):
+    """x: [B, S, D]. params: router [D,E], gate/up [E,D,F], down [E,F,D].
+    Returns (y [B,S,D], aux_loss).
+
+    ``whole_batch_group`` (§Perf, decode): with S=1 the per-sequence groups
+    pay the per-expert capacity floor E times per token (32x padding for
+    mixtral). Regrouping the whole local batch into ONE routing group makes
+    capacity ~= tokens*top_k*cf/E — a ~8x decode FLOP cut. Exact (same
+    routing, same combine), just a different dispatch layout."""
+    if whole_batch_group and x.shape[1] == 1 and x.shape[0] > 1:
+        y, aux = moe_ffn(x.reshape(1, -1, x.shape[-1]), params,
+                         num_experts=num_experts, top_k=top_k,
+                         cap_factor=cap_factor, rules=rules)
+        return y.reshape(x.shape), aux
+    B, S, D = x.shape
+    dtype = x.dtype
+    cap = capacity(S, num_experts, top_k, cap_factor)
+    weights, idx, aux = route(x, params["router"], num_experts, top_k)
+    slot_token, slot_valid, token_slot = dispatch_indices(idx, num_experts, cap)
+
+    # gather tokens into [B, E, C, D] (token index = entry // k)
+    tok_of_entry = slot_token // top_k
+    xg = jnp.take_along_axis(
+        x[:, :, None, :],                                    # [B,S,1,D]
+        tok_of_entry.reshape(B, num_experts * cap)[:, :, None, None],
+        axis=1).reshape(B, num_experts, cap, D)
+    xg = jnp.where(slot_valid[..., None], xg, 0).astype(dtype)
+    if rules is not None:
+        xg = rules.constrain(xg, "batch", "experts", "capacity", None)
+
+    g = jnp.einsum("becd,edf->becf", xg, params["w_gate"].astype(dtype))
+    u = jnp.einsum("becd,edf->becf", xg, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    if rules is not None:
+        h = rules.constrain(h, "batch", "experts", "capacity", "mlp")
+    y_slots = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dtype))
+    if rules is not None:
+        y_slots = rules.constrain(y_slots, "batch", "experts", "capacity",
+                                  None)
+
+    # combine: y[b,s] = sum_j w[b,s,j] * y_slots[b, e_j, slot_j]
+    flat_slot = (idx * cap + jnp.minimum(token_slot, cap - 1)
+                 ).reshape(B, S * top_k)                      # [B, S*k]
+    ys = jnp.take_along_axis(
+        y_slots.reshape(B, num_experts * cap, D),
+        flat_slot[..., None], axis=1).reshape(B, S, top_k, D)
+    dropped = (token_slot >= cap)[..., None]
+    ys = jnp.where(dropped, 0, ys)
+    y = jnp.einsum("bskd,bsk->bsd", ys.astype(jnp.float32),
+                   weights).astype(dtype)
+    return y, aux

@@ -1,0 +1,100 @@
+"""GPipe-style pipeline parallelism over a mesh axis (the `pod` axis).
+
+The multi-pod default in this framework is DP-over-pod; this module
+provides the PP alternative for models whose weights outgrow one pod:
+layers are split into S contiguous stages (stage s owned by pipeline rank
+s), a batch is split into M microbatches, and the classic GPipe schedule
+runs M + S - 1 ticks: each tick every rank applies its stage to the
+microbatch it holds, then activations rotate one rank forward with
+`ppermute`. Bubble fraction = (S-1)/(M+S-1).
+
+Implementation: `jax.shard_map` over the pipeline axis. Stage parameters
+arrive stacked on a leading axis of size S (sharded over the pipeline
+axis, so each rank holds exactly its stage's slice). Works under jit,
+composes with in-stage TP/DP sharding on the other mesh axes.
+
+Validated in tests/test_pipeline.py (8 fake devices, vs the unpipelined
+reference) — exactness, not an approximation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
+                   axis: str = "pod", num_microbatches: int = None):
+    """Run x through all pipeline stages.
+
+    stage_fn(params_slice, microbatch) -> microbatch   (one stage's layers)
+    stage_params: pytree with leading dim = n_stages (sharded over `axis`)
+    x: [B, ...] the batch, replicated over the pipeline axis (it flows
+       through every stage; DP/TP sharding lives on the OTHER mesh axes)
+
+    Returns the final activations (replicated over the pipeline axis).
+    """
+    S = mesh.shape[axis]
+    M = num_microbatches or S
+    B = x.shape[0]
+    assert B % M == 0, (B, M)
+
+    def ranked(params_local, x_local):
+        # params_local: this rank's stage slice (leading dim 1) — unstack
+        p = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        rank = jax.lax.axis_index(axis)
+        mb = x_local.reshape((M, x_local.shape[0] // M) + x_local.shape[1:])
+
+        # GPipe schedule: a circular buffer of in-flight microbatches.
+        # state[i] = activations currently held; after each tick, pass to
+        # the next rank. Microbatch m enters rank 0 at tick m, exits rank
+        # S-1 at tick m + S - 1.
+        n_ticks = M + S - 1
+        buf = jnp.zeros_like(mb[0])
+        out = jnp.zeros_like(mb)
+
+        def tick(carry, t):
+            buf, out = carry
+            # rank 0 injects microbatch t (if any left)
+            inject = jnp.clip(t, 0, M - 1)
+            buf = jnp.where(rank == 0,
+                            mb[inject].astype(buf.dtype), buf)
+            # every rank applies its stage to what it holds
+            y = stage_fn(p, buf)
+            # last rank retires microbatch t - (S - 1)
+            retire = t - (S - 1)
+            ok = (retire >= 0) & (retire < M)
+            out = jax.lax.cond(
+                ok,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y.astype(o.dtype), jnp.clip(retire, 0, M - 1), 0),
+                lambda o: o, out)
+            # rotate activations forward one rank
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, out), None
+
+        (buf, out), _ = jax.lax.scan(tick, (buf, out), jnp.arange(n_ticks))
+        # `out` is only valid on the LAST rank; broadcast it back so every
+        # rank returns its own batch shard (psum of masked contributions)
+        mine = jnp.where(rank == S - 1, out, jnp.zeros_like(out))
+        out = jax.lax.psum(mine, axis)
+        return out.reshape(x_local.shape)
+
+    pspec = jax.tree_util.tree_map(lambda _: PS(axis), stage_params)
+    fn = jax.shard_map(ranked, mesh=mesh,
+                       in_specs=(pspec, PS()), out_specs=PS(),
+                       check_vma=False)
+    return fn(stage_params, x)
+
+
+def unpipelined_reference(stage_fn: Callable, stage_params, x):
+    """Sequentially apply all stages (oracle for tests)."""
+    S = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+    for s in range(S):
+        p = jax.tree_util.tree_map(lambda a: a[s], stage_params)
+        x = stage_fn(p, x)
+    return x

@@ -1,0 +1,128 @@
+"""Logical-axis sharding: the paper's TLP/DLP split mapped onto mesh axes.
+
+Every parameter / activation dimension carries a *logical* axis name; a
+``Rules`` table maps logical names to mesh axes.  TLP (the paper's harts)
+lands on ``pod``/``data``; DLP (the paper's vector lanes D) lands on
+``model``.  A divisibility guard silently downgrades to replication when a
+dimension does not divide the mesh axis (e.g. hymba's 25 heads on a 16-way
+model axis) and records the downgrade for DESIGN/EXPERIMENTS notes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import ModelConfig, Parallelism
+
+
+@dataclass
+class Rules:
+    """logical axis -> mesh axis (str), tuple of mesh axes, or None."""
+
+    mesh: Optional[Mesh]
+    mapping: dict
+    downgrades: list = field(default_factory=list)
+
+    def axis_size(self, mesh_axes) -> int:
+        if self.mesh is None or mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+    def spec(self, logical_axes, shape=None) -> PS:
+        """PartitionSpec for a tensor with the given logical axes; if
+        ``shape`` is given, apply the divisibility guard per dimension."""
+        out = []
+        for i, name in enumerate(logical_axes):
+            mesh_axes = self.mapping.get(name)
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            size = self.axis_size(mesh_axes)
+            if shape is not None and shape[i] % size != 0:
+                self.downgrades.append((name, shape[i], mesh_axes))
+                out.append(None)
+            else:
+                out.append(mesh_axes)
+        return PS(*out)
+
+    def sharding(self, logical_axes, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint by logical axes (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical_axes, x.shape)))
+
+
+def make_rules(mesh: Optional[Mesh], cfg: ModelConfig, par: Parallelism) -> Rules:
+    """Build the logical->mesh table for one (arch, mesh) pair."""
+    has_pod = mesh is not None and "pod" in mesh.axis_names
+    ep = has_pod and par.expert_parallel
+    # EP consumes the pod axis for the expert dim; batch then stays on data
+    batch_axes = ("pod", "data") if has_pod and not ep else "data"
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    if par.pure_dp:
+        # §Perf TLP/DLP rebalance (the paper's Fig-2 lesson at rack scale):
+        # for models whose per-shard matmuls are too small to pay for TP
+        # all-reduces, fold the model axis into data parallelism and shard
+        # the optimizer state ZeRO-style over both axes.
+        dp_axes = ("pod", "data", "model") if has_pod else ("data", "model")
+        return Rules(mesh=mesh, mapping={
+            "batch": dp_axes, "seq": None, "seq_sp": None, "embed_act": None,
+            "heads": None, "kv_heads": None, "head_dim": None, "window": None,
+            "cache_seq": None, "embed": ("data", "model"), "mlp": None,
+            "vocab": None, "layers": None, "experts": None, "capacity": None,
+            "ssm_heads": None, "ssm_state": None, "ssm_dim": None,
+            "conv": None, None: None,
+        })
+
+    # KV cache: shard heads over "model" when divisible; otherwise shard the
+    # cache sequence dim (flash-decoding style — XLA inserts the softmax-sum
+    # all-reduce). Avoids replicated multi-GiB caches for kv=8 archs.
+    kv_shardable = cfg.num_kv_heads and msize and \
+        cfg.num_kv_heads % max(msize, 1) == 0
+
+    mapping = {
+        # activations
+        "batch": batch_axes,
+        "seq": None,
+        "seq_sp": "model" if par.sequence_parallel else None,
+        "embed_act": None,
+        # attention
+        "heads": "model",
+        "kv_heads": "model" if kv_shardable else None,
+        "head_dim": None,
+        "window": None,
+        "cache_seq": None if kv_shardable else "model",
+        # params
+        "embed": "data" if par.fsdp else None,
+        "mlp": None if par.moe_capacity_sharding else "model",
+        "vocab": "model",
+        "layers": None,
+        # moe
+        "experts": ("pod" if ep else None),
+        "capacity": "model" if par.moe_capacity_sharding else None,
+        # ssm
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "ssm_dim": "model",
+        "conv": None,
+        # scalars / misc
+        None: None,
+    }
+    return Rules(mesh=mesh, mapping=mapping)
+
+
+def named_sharding(rules: Rules, logical_axes, shape=None):
+    return rules.sharding(logical_axes, shape)

@@ -1,0 +1,135 @@
+"""Mamba-2 SSD (state-space duality) layer: chunked quadratic-within-chunk /
+recurrent-across-chunk training path, O(1)-state decode path.
+
+The chunked algorithm is the oracle for kernels/ssd_scan.py (same math).
+Shapes: x [B,S,H,P] heads x headdim, B/C [B,S,G,N] (G groups, GQA-style),
+dt [B,S,H] (post-softplus), A [H] negative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _segsum_decay(a):
+    """a: [..., cs] per-step log-decay (<=0).
+    Returns [..., cs, cs] matrix exp(sum_{t=j+1..i} a_t) for i>=j else 0."""
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]       # [..., i, j]
+    tril = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(tril, jnp.exp(jnp.where(tril, diff, 0.0)), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+    """Returns (y [B,S,H,P], final_state [B,H,P,N]). f32 internals.
+    S is padded up to a chunk multiple internally (dt=0 padding is exact:
+    zero contribution to outputs and decay-neutral for the state)."""
+    Bz, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, state = ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                               initial_state=initial_state)
+        return y[:, :S], state
+    nc, cs = S // chunk, chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    x_ = x.astype(f32).reshape(Bz, nc, cs, H, P)
+    dt_ = dt.astype(f32).reshape(Bz, nc, cs, H)
+    B_ = B.astype(f32).reshape(Bz, nc, cs, G, N)
+    C_ = C.astype(f32).reshape(Bz, nc, cs, G, N)
+    a = dt_ * A.astype(f32)                            # [b,c,s,h] <= 0
+    a_h = a.transpose(0, 1, 3, 2)                      # [b,c,h,s]
+    cum = jnp.cumsum(a_h, axis=-1)                     # [b,c,h,s]
+    xdt = x_ * dt_[..., None]                          # [b,c,s,h,p]
+
+    # ---- intra-chunk (quadratic within cs) ----
+    seg = _segsum_decay(a_h)                           # [b,c,h,i,j]
+    cb = jnp.einsum("bcign,bcjgn->bcgij", C_, B_)      # [b,c,g,i,j]
+    cb = jnp.repeat(cb, rep, axis=2)                   # g -> h
+    scores = cb * seg
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)        # [b,c,h,s]
+    Bh = jnp.repeat(B_, rep, axis=3).transpose(0, 1, 3, 2, 4)  # [b,c,h,s,n]
+    states = jnp.einsum("bchj,bchjn,bcjhp->bchpn",
+                        decay_to_end, Bh, xdt)         # [b,c,h,p,n]
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cum[..., -1])                # [b,c,h]
+    h0 = (jnp.zeros((Bz, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h_prev, inp):
+        st, dec = inp                                  # [b,h,p,n], [b,h]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                   # [b,c,h,p,n]
+
+    Ch = jnp.repeat(C_, rep, axis=3).transpose(0, 1, 3, 2, 4)  # [b,c,h,s,n]
+    y_inter = jnp.einsum("bchin,bchpn->bcihp", Ch * jnp.exp(cum)[..., None],
+                         h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bz, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD update. state [B,H,P,N]; x_t [B,H,P]; dt_t [B,H];
+    B_t/C_t [B,G,N]. Returns (y [B,H,P], new_state)."""
+    f32 = jnp.float32
+    Bz, H, P, N = state.shape
+    G = B_t.shape[1]
+    rep = H // G
+    a = jnp.exp(dt_t.astype(f32) * A.astype(f32))      # [B,H]
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)      # [B,H,N]
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    upd = (dt_t.astype(f32)[..., None] * x_t.astype(f32))[..., None] \
+        * Bh[..., None, :]                             # [B,H,P,N]
+    new_state = state.astype(f32) * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state.astype(state.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Sequential reference recurrence (oracle for tests; small shapes)."""
+    f32 = jnp.float32
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    state = (jnp.zeros((Bz, H, P, N), f32) if initial_state is None
+             else initial_state.astype(f32))
+    ys = []
+    for t in range(S):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t],
+                                   C[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (the mamba2 short conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, state=None):
+    """x: [B, S, C]; w: [K, C] depthwise taps. If ``state`` ([B, K-1, C]) is
+    given, treat x as a continuation (decode/prefill chunk) and return the
+    updated state. Returns (y [B,S,C], new_state)."""
+    K = w.shape[0]
+    B, S, Cc = x.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, Cc), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, k:k + S] * w[k].astype(x.dtype) for k in range(K))
+    new_state = xp[:, S:] if K > 1 else state
+    return y, new_state

@@ -1,0 +1,313 @@
+"""Step functions (train / prefill / decode) + cache & input templates.
+
+Everything here is shape-polymorphic over (arch, shape) cells and mesh-
+agnostic: shardings come from the logical-axis Rules, so the same code path
+serves the CPU smoke tests (mesh=None), the 16x16 single-pod mesh and the
+2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, Parallelism, ShapeConfig
+from repro.models import model_zoo as zoo
+from repro.models.params import P, abstract as abstract_tree
+from repro.models.sharding import Rules
+from repro.optim.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+LABEL_IGNORE = -100
+
+
+# ---------------------------------------------------------------------------
+# cache templates
+# ---------------------------------------------------------------------------
+
+DECODE_HEADROOM = 64    # extra slots a prefill leaves for generation
+
+
+def cache_slots(cfg: ModelConfig, shape: ShapeConfig,
+                extra_slots: int = 0) -> int:
+    """KV slots: full seq (+headroom) for dense attention, window for SWA
+    (ring buffers never overflow — eviction handles capacity)."""
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len + extra_slots
+
+
+def cache_template(cfg: ModelConfig, shape: ShapeConfig,
+                   extra_slots: int = 0) -> dict:
+    """P-spec tree for the decode cache of one (arch, shape)."""
+    L, B = cfg.num_layers, shape.global_batch
+    layers = {}
+    if cfg.family == "audio":
+        S_self = shape.seq_len // 2 + extra_slots
+        S_cross = shape.seq_len // 2
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        layers = {
+            "k": P((L, B, S_self, KV, hd),
+                   ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                   "zeros", cfg.dtype),
+            "v": P((L, B, S_self, KV, hd),
+                   ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                   "zeros", cfg.dtype),
+            "cpos": P((L, B, S_self), ("layers", "batch", "cache_seq"),
+                      "neg1", "int32"),
+            "xk": P((L, B, S_cross, KV, hd),
+                    ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                    "zeros", cfg.dtype),
+            "xv": P((L, B, S_cross, KV, hd),
+                    ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                    "zeros", cfg.dtype),
+        }
+    else:
+        if cfg.num_heads:  # attention caches (dense/moe/vlm/hybrid)
+            S = cache_slots(cfg, shape, extra_slots)
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            layers.update({
+                "k": P((L, B, S, KV, hd),
+                       ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                       "zeros", cfg.dtype),
+                "v": P((L, B, S, KV, hd),
+                       ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                       "zeros", cfg.dtype),
+                "cpos": P((L, B, S), ("layers", "batch", "cache_seq"),
+                          "neg1", "int32"),
+            })
+        if cfg.ssm_state:  # ssm caches (ssm/hybrid)
+            C = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            layers.update({
+                "conv": P((L, B, cfg.ssm_conv - 1, C),
+                          ("layers", "batch", None, None), "zeros", cfg.dtype),
+                "state": P((L, B, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                           ("layers", "batch", "ssm_heads", None, None),
+                           "zeros", "float32"),
+            })
+    return {"layers": layers,
+            "pos": P((B,), ("batch",), "zeros", "int32")}
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs for the dry-run / data templates)
+# ---------------------------------------------------------------------------
+
+def batch_template(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """P-spec tree for one step's data batch."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if cfg.family == "audio":
+        Se = Sd = S // 2
+        if kind == "train":
+            return {"frames": P((B, Se, cfg.d_model), ("batch", "seq", None),
+                                "normal", cfg.dtype),
+                    "tokens": P((B, Sd), ("batch", "seq"), "zeros", "int32"),
+                    "labels": P((B, Sd), ("batch", "seq"), "zeros", "int32")}
+        if kind == "prefill":
+            return {"frames": P((B, Se, cfg.d_model), ("batch", "seq", None),
+                                "normal", cfg.dtype),
+                    "tokens": P((B, Sd), ("batch", "seq"), "zeros", "int32")}
+        return {"tokens": P((B, 1), ("batch", None), "zeros", "int32")}
+    if cfg.family == "vlm":
+        Fl = cfg.frontend_len
+        if kind == "train":
+            return {"patch_embeds": P((B, Fl, cfg.d_model),
+                                      ("batch", "seq", None), "normal", cfg.dtype),
+                    "tokens": P((B, S - Fl), ("batch", "seq"), "zeros", "int32"),
+                    "labels": P((B, S), ("batch", "seq"), "zeros", "int32")}
+        if kind == "prefill":
+            return {"patch_embeds": P((B, Fl, cfg.d_model),
+                                      ("batch", "seq", None), "normal", cfg.dtype),
+                    "tokens": P((B, S - Fl), ("batch", "seq"), "zeros", "int32")}
+        return {"tokens": P((B, 1), ("batch", None), "zeros", "int32")}
+    # plain decoder families
+    if kind == "train":
+        return {"tokens": P((B, S), ("batch", "seq"), "zeros", "int32"),
+                "labels": P((B, S), ("batch", "seq"), "zeros", "int32")}
+    if kind == "prefill":
+        return {"tokens": P((B, S), ("batch", "seq"), "zeros", "int32")}
+    return {"tokens": P((B, 1), ("batch", None), "zeros", "int32")}
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """logits [B,S,Vp] (any float dtype), labels [B,S] int32 with
+    LABEL_IGNORE masked. Returns (mean_nll, z_loss_term)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != LABEL_IGNORE) & (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    z_loss = jnp.sum(jnp.square(lse) * mask) / denom
+    return nll.sum() / denom, z_loss
+
+
+# ---------------------------------------------------------------------------
+# forward dispatch
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, rules: Rules, batch, kind: str):
+    """Returns (x [B,S,D], positions [B,S])."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        patches = jnp.einsum("bsd,de->bse", batch["patch_embeds"].astype(dtype),
+                             params["patch_adapter"].astype(dtype))
+        toks = zoo.embed_tokens(params, cfg, batch["tokens"])
+        x = jnp.concatenate([patches, toks], axis=1)
+    else:
+        x = zoo.embed_tokens(params, cfg, batch["tokens"])
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = rules.constrain(x, "batch", "seq_sp", None)
+    return x, positions
+
+
+def forward_train(params, cfg, rules, par, batch):
+    """Returns (logits, labels, aux)."""
+    if cfg.family == "audio":
+        enc = zoo.encoder_forward(params, cfg, rules, par, batch["frames"])
+        x = zoo.embed_tokens(params, cfg, batch["tokens"])
+        B, Sd = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32)[None], (B, Sd))
+        hid, _, aux = zoo.encdec_decoder_forward(params, cfg, rules, par, x,
+                                                 pos, enc)
+    else:
+        x, pos = _embed_inputs(params, cfg, rules, batch, "train")
+        hid, _, aux = zoo.decoder_forward(params, cfg, rules, par, x, pos)
+    logits = zoo.logits_fn(params, cfg, hid)
+    return logits, batch["labels"], aux
+
+
+def make_loss_fn(cfg: ModelConfig, rules: Rules, par: Parallelism):
+    def loss_fn(params, batch):
+        logits, labels, aux = forward_train(params, cfg, rules, par, batch)
+        nll, z = softmax_xent(logits, labels, cfg.vocab_size)
+        loss = nll + 1e-4 * z + 1e-2 * aux
+        return loss, {"loss": nll, "z_loss": z, "aux_loss": aux}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, rules: Rules, par: Parallelism,
+                    opt_cfg: OptimizerConfig):
+    loss_fn = make_loss_fn(cfg, rules, par)
+
+    if par.mixed_precision:
+        # bf16 compute params (cotangents — and therefore the backward's
+        # data-parallel reductions — run in bf16, halving collective bytes);
+        # the f32 params stay the master copy updated by AdamW.
+        base_loss_fn = loss_fn
+
+        def loss_fn(params, batch):  # noqa: F811 — deliberate wrap
+            p_bf16 = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+            return base_loss_fn(p_bf16, batch)
+
+    def train_step(params, opt_state, batch):
+        if par.grad_accum > 1:
+            B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            micro = B // par.grad_accum
+
+            def acc_step(carry, mb):
+                (l_acc, g_acc) = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (l_acc + l, g_acc), m
+
+            batch_r = jax.tree_util.tree_map(
+                lambda x: x.reshape((par.grad_accum, micro) + x.shape[1:]),
+                batch)
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), ms = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zeros_g), batch_r)
+            loss = loss / par.grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / par.grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params,
+                                                      opt_cfg)
+        metrics = dict(metrics, total_loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Rules, par: Parallelism,
+                      shape: ShapeConfig):
+    # leave generation headroom so decode never overwrites live slots
+    cache_t = cache_template(cfg, shape, extra_slots=DECODE_HEADROOM)
+
+    def prefill_step(params, batch):
+        cache0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, p.dtype),
+            cache_t["layers"],
+            is_leaf=lambda x: isinstance(x, P))
+        if cfg.family == "audio":
+            enc = zoo.encoder_forward(params, cfg, rules, par, batch["frames"])
+            x = zoo.embed_tokens(params, cfg, batch["tokens"])
+            B, Sd = batch["tokens"].shape
+            pos = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32)[None],
+                                   (B, Sd))
+            hid, layer_cache, _ = zoo.encdec_decoder_forward(
+                params, cfg, rules, par, x, pos, enc,
+                cache={"layers": cache0}, decode=False)
+            S_total = Sd
+        else:
+            x, pos = _embed_inputs(params, cfg, rules, batch, "prefill")
+            hid, layer_cache, _ = zoo.decoder_forward(
+                params, cfg, rules, par, x, pos,
+                cache={"layers": cache0}, decode=False)
+            S_total = x.shape[1]
+        logits = zoo.logits_fn(params, cfg, hid[:, -1:])
+        B = hid.shape[0]
+        cache = {"layers": layer_cache,
+                 "pos": jnp.full((B,), S_total, jnp.int32)}
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: Rules, par: Parallelism,
+                     shape: ShapeConfig):
+    def decode_step(params, cache, batch):
+        tokens = batch["tokens"]                       # [B, 1]
+        x = zoo.embed_tokens(params, cfg, tokens)
+        B = x.shape[0]
+        pos = cache["pos"][:, None]                    # [B, 1] per-slot
+        if cfg.family == "audio":
+            hid, layer_cache, _ = zoo.encdec_decoder_forward(
+                params, cfg, rules, par, x, pos, None, cache=cache,
+                decode=True)
+        else:
+            hid, layer_cache, _ = zoo.decoder_forward(
+                params, cfg, rules, par, x, pos, cache=cache, decode=True)
+        logits = zoo.logits_fn(params, cfg, hid)
+        new_cache = {"layers": layer_cache, "pos": cache["pos"] + 1}
+        return logits, new_cache
+
+    return decode_step
+
+
+def make_step(cfg, rules, par, shape, opt_cfg: Optional[OptimizerConfig] = None):
+    if shape.kind == "train":
+        return make_train_step(cfg, rules, par, opt_cfg or OptimizerConfig(
+            moment_dtype=par.moment_dtype))
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, rules, par, shape)
+    return make_decode_step(cfg, rules, par, shape)

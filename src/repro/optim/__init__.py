@@ -1,0 +1,2 @@
+from repro.optim.optimizer import (OptimizerConfig, adamw_init, adamw_update,
+                                   global_norm, lr_schedule)

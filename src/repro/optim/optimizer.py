@@ -1,0 +1,130 @@
+"""AdamW with optional int8-quantized moment storage.
+
+Moment quantization (per-row absmax scales) is the memory trick that lets the
+314B grok arch train on 256 x 16 GiB chips: fp32 m+v would be 2.5 TB; int8
+(+f32 scales) is ~0.63 TB. Quantization error behaves like a tiny amount of
+moment noise; we validate convergence parity on small models in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # float32 | bfloat16 | int8
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 moment codec (per-row absmax)
+# ---------------------------------------------------------------------------
+
+def _q_scale_shape(shape):
+    return shape[:-1] + (1,) if len(shape) >= 1 else shape
+
+
+def quantize_i8(x):
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x), 1e-12) / 127.0
+        return {"q": jnp.round(x / scale).astype(jnp.int8), "s": scale}
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def dequantize_i8(qs):
+    return qs["q"].astype(jnp.float32) * qs["s"]
+
+
+def _moment_zeros(leaf, dtype: str):
+    if dtype == "int8":
+        return {"q": jnp.zeros(leaf.shape, jnp.int8),
+                "s": jnp.ones(_q_scale_shape(leaf.shape), jnp.float32)}
+    return jnp.zeros(leaf.shape, jnp.dtype(dtype))
+
+
+def _moment_read(m, dtype: str):
+    return dequantize_i8(m) if dtype == "int8" else m.astype(jnp.float32)
+
+
+def _moment_write(x, dtype: str):
+    return quantize_i8(x) if dtype == "int8" else x.astype(jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: OptimizerConfig):
+    dt = cfg.moment_dtype
+    return {
+        "count": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(lambda p: _moment_zeros(p, dt), params),
+        "v": jax.tree_util.tree_map(lambda p: _moment_zeros(p, dt), params),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    dt = cfg.moment_dtype
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, opt_state["count"])
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+
+    bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    is_moment = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = cfg.b1 * _moment_read(m, dt) + (1 - cfg.b1) * g
+        v_f = cfg.b2 * _moment_read(v, dt) + (1 - cfg.b2) * jnp.square(g)
+        step = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (step + decay)).astype(p.dtype)
+        return new_p, _moment_write(m_f, dt), _moment_write(v_f, dt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"count": count, "m": new_m, "v": new_v}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (FaultToleranceConfig, Heartbeats,
+                                           PreemptionGuard,
+                                           StragglerDetector, plan_remesh)

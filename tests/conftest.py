@@ -1,0 +1,18 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout import without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; multi-device dry-run tests spawn
+# subprocesses that set it themselves.
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

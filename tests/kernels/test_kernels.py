@@ -1,0 +1,194 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs the ref.py
+pure-jnp oracles, plus hypothesis property tests on the KVI program
+executor."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.het_mimd import het_mimd_composite
+from repro.kernels.kvi_vops import run_vops
+from repro.kernels.spm_matmul import spm_matmul
+
+
+class TestSpmMatmul:
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128),
+                                       (64, 64, 64)])
+    def test_vs_ref(self, dtype, shape, rng):
+        M, K, N = shape
+        dt = jnp.dtype(dtype)
+        if dtype == "int8":
+            a = jnp.asarray(rng.integers(-100, 100, (M, K)), dt)
+            b = jnp.asarray(rng.integers(-100, 100, (K, N)), dt)
+            assert jnp.array_equal(spm_matmul(a, b), ref.matmul_ref(a, b))
+        else:
+            a = jnp.asarray(rng.normal(0, 1, (M, K)), dt)
+            b = jnp.asarray(rng.normal(0, 1, (K, N)), dt)
+            np.testing.assert_allclose(
+                np.asarray(spm_matmul(a, b), np.float32),
+                np.asarray(ref.matmul_ref(a, b), np.float32),
+                rtol=3e-2, atol=3e-2)
+
+
+class TestConv2d:
+    @pytest.mark.parametrize("H,W,F", [(32, 32, 3), (64, 48, 5), (16, 16, 7),
+                                       (33, 31, 3)])
+    def test_int32_exact(self, H, W, F, rng):
+        img = jnp.asarray(rng.integers(-128, 128, (H, W)), jnp.int32)
+        filt = jnp.asarray(rng.integers(-8, 8, (F, F)), jnp.int32)
+        got = ops.conv2d_op(img, filt, shift=4)
+        assert jnp.array_equal(got, ref.conv2d_ref(img, filt, shift=4))
+
+    def test_float(self, rng):
+        img = jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)
+        filt = jnp.asarray(rng.normal(0, 1, (3, 3)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(ops.conv2d_op(img, filt)),
+                                   np.asarray(ref.conv2d_ref(img, filt)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFft:
+    @pytest.mark.parametrize("B,n", [(8, 256), (3, 64), (1, 1024)])
+    def test_vs_jnp_fft(self, B, n, rng):
+        re = jnp.asarray(rng.normal(0, 1, (B, n)), jnp.float32)
+        im = jnp.asarray(rng.normal(0, 1, (B, n)), jnp.float32)
+        gre, gim = ops.fft_op(re, im)
+        wre, wim = ref.fft_ref(re, im)
+        np.testing.assert_allclose(np.asarray(gre), np.asarray(wre),
+                                   rtol=1e-3, atol=1e-3 * n)
+        np.testing.assert_allclose(np.asarray(gim), np.asarray(wim),
+                                   rtol=1e-3, atol=1e-3 * n)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                               (True, 64)])
+    @pytest.mark.parametrize("B,H,KV,S,hd", [(2, 4, 2, 256, 32),
+                                             (1, 2, 2, 128, 64)])
+    def test_vs_ref(self, causal, window, B, H, KV, S, hd, rng):
+        q = jnp.asarray(rng.normal(0, 1, (B, H, S, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, KV, S, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, KV, S, hd)), jnp.float32)
+        got = ops.attention_op(q, k, v, causal=causal, window=window,
+                               bq=64, bk=64)
+        want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_xla_path(self, rng):
+        """kernel == flash_attention_xla == quadratic ref (one semantics)."""
+        from repro.models.layers import flash_attention_xla
+        B, H, KV, S, hd = 1, 4, 2, 128, 32
+        q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)), jnp.float32)
+        xla = flash_attention_xla(q, k, v, causal=True, q_block=64,
+                                  kv_block=64)
+        pallas = ops.attention_op(q.transpose(0, 2, 1, 3),
+                                  k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3),
+                                  causal=True, bq=64, bk=64)
+        np.testing.assert_allclose(np.asarray(xla),
+                                   np.asarray(pallas.transpose(0, 2, 1, 3)),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestSsdScan:
+    @pytest.mark.parametrize("S,chunk", [(128, 32), (256, 256), (64, 16)])
+    def test_vs_ref(self, S, chunk, rng):
+        Bz, H, P, N, G = 2, 4, 16, 8, 2
+        x = jnp.asarray(rng.normal(0, 1, (Bz, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bz, S, H)), jnp.float32)
+        A = -jnp.exp(jnp.asarray(rng.normal(0, 0.5, (H,)), jnp.float32))
+        Bm = jnp.asarray(rng.normal(0, 1, (Bz, S, G, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(0, 1, (Bz, S, G, N)), jnp.float32)
+        y, st_ = ops.ssd_scan_op(x, dt, A, Bm, Cm, chunk=chunk)
+        da = dt * A[None, None]
+        yr, sr = ref.ssd_scan_ref(x, da, dt, jnp.repeat(Bm, H // G, axis=2),
+                                  jnp.repeat(Cm, H // G, axis=2))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=3e-3, atol=3e-3)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(sr),
+                                   rtol=3e-3, atol=3e-3)
+
+    def test_matches_model_ssm_module(self, rng):
+        from repro.models.ssm import ssd_chunked
+        Bz, S, H, P, N = 1, 64, 2, 8, 4
+        x = jnp.asarray(rng.normal(0, 1, (Bz, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bz, S, H)), jnp.float32)
+        A = -jnp.exp(jnp.asarray(rng.normal(0, 0.5, (H,)), jnp.float32))
+        Bm = jnp.asarray(rng.normal(0, 1, (Bz, S, 1, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(0, 1, (Bz, S, 1, N)), jnp.float32)
+        y_kernel, _ = ops.ssd_scan_op(x, dt, A, Bm, Cm, chunk=16)
+        y_model, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                                   rtol=3e-3, atol=3e-3)
+
+
+int_vec = st.lists(st.integers(-10**6, 10**6), min_size=8, max_size=8)
+
+
+class TestKviVops:
+    @given(int_vec, int_vec, st.integers(0, 15))
+    @settings(max_examples=20, deadline=None)
+    def test_fused_program_matches_ref(self, a, b, sh):
+        a = jnp.asarray(np.resize(np.array(a, np.int32), 1024))
+        b = jnp.asarray(np.resize(np.array(b, np.int32), 1024))
+        prog = [("kvmul", 2, 0, 1, 0), ("ksrav", 2, 2, None, sh),
+                ("krelu", 2, 2, None, 0)]
+        got = run_vops(prog, [a, b])
+        want = ref.vops_ref(prog, [a, b])
+        assert jnp.array_equal(got, want)
+
+    def test_all_single_ops(self, rng):
+        a = jnp.asarray(rng.integers(-1000, 1000, 512), jnp.int32)
+        b = jnp.asarray(rng.integers(-1000, 1000, 512), jnp.int32)
+        assert jnp.array_equal(ops.kaddv(a, b), a + b)
+        assert jnp.array_equal(ops.ksubv(a, b), a - b)
+        assert jnp.array_equal(ops.kvmul(a, b), a * b)
+        assert jnp.array_equal(ops.krelu(a), jnp.maximum(a, 0))
+        assert jnp.array_equal(ops.ksvaddsc(a, 7), a + 7)
+        assert jnp.array_equal(ops.ksvmulsc(a, -3), a * -3)
+        assert jnp.array_equal(ops.kvslt(a, b), (a < b).astype(jnp.int32))
+        assert jnp.array_equal(ops.ksvslt(a, 0), (a < 0).astype(jnp.int32))
+        assert jnp.array_equal(ops.kvcp(a), a)
+
+
+class TestReductions:
+    @given(st.lists(st.integers(-1000, 1000), min_size=4, max_size=4))
+    @settings(max_examples=20, deadline=None)
+    def test_kdotp_family(self, a):
+        x = jnp.asarray(np.resize(np.array(a, np.int32), 256))
+        assert int(ops.kdotp(x, x)) == int(ref.kdotp_ref(x, x))
+        assert int(ops.kdotpps(x, x, 5)) == int(ref.kdotp_ref(x, x, 5))
+        assert int(ops.kvred(x)) == int(ref.kvred_ref(x))
+
+    def test_float_dot(self, rng):
+        x = jnp.asarray(rng.normal(0, 1, 2048), jnp.float32)
+        y = jnp.asarray(rng.normal(0, 1, 2048), jnp.float32)
+        np.testing.assert_allclose(float(ops.kdotp(x, y)),
+                                   float(ref.kdotp_ref(x, y)), rtol=1e-5)
+
+
+class TestHetMimd:
+    def test_composite_all_branches(self, rng):
+        F = 3
+        inner = jnp.asarray(rng.normal(0, 1, (32, 32)), jnp.float32)
+        img = jnp.pad(inner, 1)            # zero-padded like conv2d_ref
+        filt = jnp.asarray(rng.normal(0, 1, (F, F)), jnp.float32)
+        fre = jnp.asarray(rng.normal(0, 1, (4, 128)), jnp.float32)
+        fim = jnp.asarray(rng.normal(0, 1, (4, 128)), jnp.float32)
+        A = jnp.asarray(rng.normal(0, 1, (32, 48)), jnp.float32)
+        B = jnp.asarray(rng.normal(0, 1, (48, 16)), jnp.float32)
+        conv, ore, oim, mm = het_mimd_composite(img, filt, fre, fim, A, B)
+        np.testing.assert_allclose(np.asarray(mm), np.asarray(A @ B),
+                                   rtol=1e-4, atol=1e-4)
+        wre, wim = ref.fft_ref(fre, fim)
+        np.testing.assert_allclose(np.asarray(ore), np.asarray(wre),
+                                   rtol=1e-3, atol=0.2)
+        want_conv = ref.conv2d_ref(inner, filt)
+        np.testing.assert_allclose(np.asarray(conv), np.asarray(want_conv),
+                                   rtol=1e-3, atol=1e-3)

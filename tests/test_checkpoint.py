@@ -1,0 +1,118 @@
+"""Checkpoint manager: roundtrip, async, atomicity, integrity, GC."""
+import json
+import shutil
+import threading
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore, save)
+
+
+def tree_of(rng):
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+                       "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32)},
+            "opt": {"count": jnp.asarray(3, jnp.int32),
+                    "m": [jnp.ones((4,)), jnp.zeros((2, 2))]}}
+
+
+def test_roundtrip(tmp_path, rng):
+    t = tree_of(rng)
+    save(tmp_path, 7, t)
+    assert latest_step(tmp_path) == 7
+    got, step = restore(tmp_path, t)
+    assert step == 7
+    for a, b in zip(*(map(lambda x: list(map(np.asarray,
+                     __import__('jax').tree_util.tree_leaves(x))), (t, got)))):
+        assert np.array_equal(a, b)
+
+
+def test_async_save_and_gc(tmp_path, rng):
+    t = tree_of(rng)
+    mgr = CheckpointManager(tmp_path, interval=1, keep=2)
+    for step in range(1, 6):
+        assert mgr.maybe_save(step, t)
+    mgr.wait()
+    dirs = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert len(dirs) == 2 and dirs[-1].endswith("5")
+    assert latest_step(tmp_path) == 5
+
+
+def test_crash_safety_tmp_never_visible(tmp_path, rng):
+    """A leftover .tmp dir must not be treated as a checkpoint."""
+    t = tree_of(rng)
+    save(tmp_path, 1, t)
+    fake = Path(tmp_path) / "step_000000002.tmp"
+    fake.mkdir()
+    (fake / "garbage").write_text("x")
+    got, step = restore(tmp_path, t)
+    assert step == 1
+
+
+def test_integrity_check(tmp_path, rng):
+    t = tree_of(rng)
+    save(tmp_path, 1, t)
+    man = Path(tmp_path) / "step_000000001" / "manifest.json"
+    m = json.loads(man.read_text())
+    next(iter(m["arrays"].values()))["crc32"] ^= 0xDEADBEEF
+    man.write_text(json.dumps(m))
+    with pytest.raises(IOError):
+        restore(tmp_path, t)
+
+
+def test_interval_gating(tmp_path, rng):
+    t = tree_of(rng)
+    mgr = CheckpointManager(tmp_path, interval=10)
+    assert not mgr.maybe_save(3, t)
+    assert mgr.maybe_save(10, t)
+    assert mgr.maybe_save(4, t, force=True)   # preemption path
+    mgr.wait()
+
+
+def test_resume_equivalence(tmp_path, rng):
+    """train k steps; checkpoint; train k more == restore + train k more."""
+    import jax
+    from repro.configs import get_spec, reduced_model
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import DataConfig, DataPipeline
+    from repro.models import model_zoo as zoo, params as params_lib, \
+        steps as steps_lib
+    from repro.models.sharding import make_rules
+    from repro.optim.optimizer import OptimizerConfig, adamw_init
+
+    spec = get_spec("llama3.2-1b")
+    cfg = reduced_model(spec.model)
+    par = spec.parallelism.replace(remat="none", fsdp=False,
+                                   sequence_parallel=False)
+    rules = make_rules(None, cfg, par)
+    opt_cfg = OptimizerConfig()
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, rules, par, opt_cfg))
+    data = DataPipeline(cfg, ShapeConfig("t", "train", 64, 2), DataConfig())
+    params = params_lib.initialize(zoo.param_template(cfg),
+                                   jax.random.PRNGKey(0))
+    opt = adamw_init(params, opt_cfg)
+    for s in range(3):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        params, opt, _ = step_fn(params, opt, b)
+    save(tmp_path, 3, {"p": params, "o": opt})
+
+    # continue directly
+    p1, o1 = params, opt
+    for s in range(3, 6):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        p1, o1, m1 = step_fn(p1, o1, b)
+
+    # restore and continue
+    tree, start = restore(tmp_path, {"p": params, "o": opt})
+    p2, o2 = tree["p"], tree["o"]
+    for s in range(start, start + 3):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        p2, o2, m2 = step_fn(p2, o2, b)
+    for a, b_ in zip(jax.tree_util.tree_leaves(p1),
+                     jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32), atol=1e-6)

@@ -1,0 +1,61 @@
+"""Data pipeline: determinism, resume contract, host disjointness."""
+import numpy as np
+
+from repro.configs import get_spec, reduced_model
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, DataPipeline, SyntheticTokens
+
+
+def _pipe(num_hosts=1, host_id=0, seed=0):
+    cfg = reduced_model(get_spec("llama3.2-1b").model)
+    shape = ShapeConfig("t", "train", 64, 8)
+    return DataPipeline(cfg, shape, DataConfig(
+        seed=seed, num_hosts=num_hosts, host_id=host_id))
+
+
+def test_batch_is_pure_function_of_step():
+    p1, p2 = _pipe(), _pipe()
+    for step in (0, 5, 1000):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        for k in b1:
+            assert np.array_equal(b1[k], b2[k])
+
+
+def test_different_steps_differ():
+    p = _pipe()
+    assert not np.array_equal(p.batch_at(0)["tokens"], p.batch_at(1)["tokens"])
+
+
+def test_host_sharding_disjoint_and_covering():
+    """2-host split: concat of host batches == the 1-host global batch."""
+    full = _pipe(num_hosts=1).batch_at(3)["tokens"]
+    h0 = _pipe(num_hosts=2, host_id=0).batch_at(3)["tokens"]
+    h1 = _pipe(num_hosts=2, host_id=1).batch_at(3)["tokens"]
+    assert np.array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_labels_are_shifted_tokens():
+    b = _pipe().batch_at(0)
+    # tokens[t+1] == labels[t] per construction (seq[:-1] / seq[1:])
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_synthetic_has_learnable_structure():
+    """pattern reuse => repeated 16-grams across sequences."""
+    src = SyntheticTokens(512, seed=0)
+    seqs = [src.sequence(i, 256) for i in range(20)]
+    grams = {}
+    for s in seqs:
+        for i in range(0, 240, 16):
+            grams[tuple(s[i:i + 8])] = grams.get(tuple(s[i:i + 8]), 0) + 1
+    assert max(grams.values()) >= 3         # patterns repeat across streams
+
+
+def test_prefetch_iterator_matches_batch_at():
+    p = _pipe()
+    it = p.iterate(start_step=2)
+    got = next(it)
+    want = p.batch_at(2)
+    p.close()
+    for k in want:
+        assert np.array_equal(got[k], want[k])

@@ -1,0 +1,88 @@
+"""Fault-tolerance runtime: heartbeats, elastic remesh planning, straggler
+detection, preemption guard."""
+import os
+import signal
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.fault_tolerance import (Heartbeats, PreemptionGuard,
+                                           StragglerDetector, plan_remesh)
+
+
+class TestHeartbeats:
+    def test_detects_dead(self):
+        t = [0.0]
+        hb = Heartbeats([0, 1, 2], timeout_s=10, clock=lambda: t[0])
+        t[0] = 5.0
+        hb.beat(0)
+        hb.beat(1)
+        t[0] = 14.0
+        assert hb.dead_hosts() == [2]
+        assert hb.alive_hosts() == [0, 1]
+
+    def test_recovery(self):
+        t = [0.0]
+        hb = Heartbeats([0, 1], timeout_s=1, clock=lambda: t[0])
+        t[0] = 5.0
+        assert hb.dead_hosts() == [0, 1]
+        hb.beat(0)
+        hb.beat(1)
+        assert hb.dead_hosts() == []
+
+
+class TestRemesh:
+    def test_keeps_model_axis(self):
+        plan = plan_remesh(list(range(31)), chips_per_host=8, model_axis=16,
+                           global_batch=256)
+        assert plan.model_axis == 16
+        assert plan.data_axis * 16 <= 31 * 8
+        assert plan.global_batch % plan.data_axis == 0
+
+    def test_power_of_two_data_axis(self):
+        plan = plan_remesh(list(range(13)), chips_per_host=4, model_axis=4,
+                           global_batch=64)
+        assert plan.data_axis & (plan.data_axis - 1) == 0
+
+    def test_raises_when_insufficient(self):
+        with pytest.raises(RuntimeError):
+            plan_remesh([0], chips_per_host=4, model_axis=16, global_batch=8)
+
+    @given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 16))
+    @settings(max_examples=40, deadline=None)
+    def test_plan_always_fits_surviving_chips(self, hosts, cph, model):
+        try:
+            plan = plan_remesh(list(range(hosts)), chips_per_host=cph,
+                               model_axis=model, global_batch=512)
+        except RuntimeError:
+            assert hosts * cph < model
+            return
+        assert plan.n_chips <= hosts * cph
+        assert plan.model_axis == model
+
+
+class TestStragglers:
+    def test_flags_persistent_outlier(self):
+        det = StragglerDetector([0, 1, 2, 3], k=3.0, patience=3)
+        flagged = []
+        for step in range(5):
+            times = {0: 1.0, 1: 1.02, 2: 0.98, 3: 5.0}
+            flagged = det.observe(times)
+        assert flagged == [3]
+
+    def test_transient_spike_not_flagged(self):
+        det = StragglerDetector([0, 1, 2, 3], k=3.0, patience=3)
+        det.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+        flagged = det.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+        assert flagged == []
+
+
+class TestPreemption:
+    def test_sigterm_sets_flag(self):
+        with PreemptionGuard() as g:
+            assert not g.requested
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert g.requested
+        # handler restored afterwards
+        assert signal.getsignal(signal.SIGTERM) != g._handler

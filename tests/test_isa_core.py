@@ -1,0 +1,127 @@
+"""KVI ISA functional semantics vs numpy oracles + SPM model, including
+hypothesis property tests over random vectors/immediates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import KlessydraConfig
+from repro.core.isa import Instr, OPDEFS, Unit, lsu_cycles, mfu_cycles
+from repro.core.mfu import Mfu
+from repro.core.spm import SpmError, SpmSpace
+
+CFG = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=8)
+
+
+def make_spm():
+    return SpmSpace(KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=8))
+
+
+vec = st.lists(st.integers(-2**31, 2**31 - 1), min_size=1, max_size=64)
+
+
+class TestMfuSemantics:
+    def _run2(self, op, a, b, **kw):
+        spm = make_spm()
+        n = len(a)
+        aa = spm.alloc("a", n)
+        ab = spm.alloc("b", n)
+        ad = spm.alloc("d", n)
+        spm.write(aa, np.array(a, np.int32))
+        spm.write(ab, np.array(b, np.int32))
+        mfu = Mfu(spm)
+        r = mfu.execute(Instr(op, dst=ad, src1=aa, src2=ab, length=n, **kw))
+        return spm.read(ad, n), r
+
+    @given(vec)
+    @settings(max_examples=25, deadline=None)
+    def test_kaddv_wraps_int32(self, a):
+        out, _ = self._run2("kaddv", a, a)
+        want = (np.array(a, np.int64) * 2).astype(np.int32)
+        assert np.array_equal(out, want)
+
+    @given(vec)
+    @settings(max_examples=25, deadline=None)
+    def test_kvmul_low_word(self, a):
+        out, _ = self._run2("kvmul", a, a)
+        want = (np.array(a, np.int64) ** 2).astype(np.int32)
+        assert np.array_equal(out, want)
+
+    @given(vec, st.integers(0, 31))
+    @settings(max_examples=25, deadline=None)
+    def test_shifts(self, a, sh):
+        spm = make_spm()
+        n = len(a)
+        aa = spm.alloc("a", n)
+        ad = spm.alloc("d", n)
+        spm.write(aa, np.array(a, np.int32))
+        mfu = Mfu(spm)
+        mfu.execute(Instr("ksrav", dst=ad, src1=aa, scalar=sh, length=n))
+        assert np.array_equal(spm.read(ad, n),
+                              np.array(a, np.int32) >> sh)
+        mfu.execute(Instr("ksrlv", dst=ad, src1=aa, scalar=sh, length=n))
+        want = (np.array(a, np.int32).view(np.uint32) >> np.uint32(sh)) \
+            .view(np.int32)
+        assert np.array_equal(spm.read(ad, n), want)
+
+    @given(vec)
+    @settings(max_examples=25, deadline=None)
+    def test_kdotp_matches_int32_sum(self, a):
+        spm = make_spm()
+        n = len(a)
+        aa = spm.alloc("a", n)
+        spm.write(aa, np.array(a, np.int32))
+        mfu = Mfu(spm)
+        r = mfu.execute(Instr("kdotp", src1=aa, src2=aa, length=n))
+        want = int(np.int64((np.array(a, np.int64) ** 2).astype(np.int32)
+                            .astype(np.int64).sum()).astype(np.int32))
+        assert r == want
+
+    def test_krelu_kvslt(self):
+        out, _ = self._run2("kvslt", [1, -5, 3], [2, -6, 3])
+        assert out.tolist() == [1, 0, 0]
+        spm = make_spm()
+        aa = spm.alloc("a", 3)
+        ad = spm.alloc("d", 3)
+        spm.write(aa, np.array([-2, 0, 5], np.int32))
+        Mfu(spm).execute(Instr("krelu", dst=ad, src1=aa, length=3))
+        assert spm.read(ad, 3).tolist() == [0, 0, 5]
+
+
+class TestSpm:
+    def test_alloc_alignment_and_overflow(self):
+        spm = make_spm()
+        a = spm.alloc("a", 3)
+        b = spm.alloc("b", 5)
+        line = CFG.D * 4
+        assert a % line == 0 and b % line == 0
+        with pytest.raises(SpmError):
+            spm.alloc("huge", spm.total_bytes)
+
+    def test_capacity_matches_paper_params(self):
+        # paper: N SPMs of spm_kbytes each, unified address space
+        spm = SpmSpace(KlessydraConfig("t", N=3, spm_kbytes=4))
+        assert spm.total_bytes == 3 * 4 * 1024
+
+
+class TestTiming:
+    def test_two_source_ops_stream_two_passes(self):
+        one_src = Instr("ksvmulsc", dst=0, src1=0, scalar=2, length=64)
+        two_src = Instr("kaddv", dst=0, src1=0, src2=4, length=64)
+        u1, s1 = mfu_cycles(one_src, D=4, setup=5)
+        u2, s2 = mfu_cycles(two_src, D=4, setup=5)
+        assert u1 == u2 == 5 + 16          # unit: line rate
+        assert s2 - 5 == 2 * (s1 - 5)      # SPMI: 2 passes for 2 sources
+
+    def test_subword_simd_packs_lanes(self):
+        i32 = Instr("kaddv", dst=0, src1=0, src2=4, length=64, elem_bytes=4)
+        i8 = Instr("kaddv", dst=0, src1=0, src2=4, length=64, elem_bytes=1)
+        assert mfu_cycles(i8, D=4, setup=5)[1] < mfu_cycles(i32, D=4, setup=5)[1]
+
+    def test_lsu_32bit_port(self):
+        i = Instr("kmemld", dst=0, src1=0, length=64)
+        assert lsu_cycles(i, mem_port_bytes=4, setup=7) == 7 + 64
+
+    def test_every_table1_op_has_a_unit(self):
+        assert len(OPDEFS) == 18           # paper Table 1: 18 instructions
+        for od in OPDEFS.values():
+            assert isinstance(od.unit, Unit)

@@ -1,0 +1,58 @@
+"""KVI kernel programs: functional equality vs numpy oracles across sizes
+(the same programs drive the cycle model — correctness here validates the
+paper-kernel implementations end to end)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import KlessydraConfig
+from repro.core.programs import (build_conv2d, build_fft, build_matmul,
+                                 conv2d_oracle, conv2d_result, fft_result,
+                                 matmul_result)
+
+CFG_BIG = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=32)
+CFG_TINY = KlessydraConfig("t", M=1, F=1, D=4, N=1, spm_kbytes=1)
+
+
+@pytest.mark.parametrize("S,F", [(4, 3), (8, 3), (16, 3), (8, 5), (8, 7)])
+def test_conv2d_program(S, F, rng):
+    img = rng.integers(-128, 128, (S, S)).astype(np.int32)
+    filt = rng.integers(-8, 8, (F, F)).astype(np.int32)
+    p = build_conv2d(CFG_BIG, img, filt, shift=3)
+    p.builder.run_functional()
+    assert np.array_equal(conv2d_result(p, S), conv2d_oracle(img, filt, 3))
+
+
+@pytest.mark.parametrize("n,resident", [(8, True), (16, False)])
+def test_matmul_program_both_paths(n, resident, rng):
+    A = rng.integers(-64, 64, (n, n)).astype(np.int32)
+    B = rng.integers(-64, 64, (n, n)).astype(np.int32)
+    cfg = CFG_BIG if resident else CFG_TINY
+    p = build_matmul(cfg, A, B)
+    p.builder.run_functional()
+    want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+    assert np.array_equal(matmul_result(p, n, n), want)
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_fft_program(n, rng):
+    re = rng.integers(-2048, 2048, n).astype(np.int32)
+    im = rng.integers(-2048, 2048, n).astype(np.int32)
+    p = build_fft(KlessydraConfig("t", spm_kbytes=16), re, im)
+    p.builder.run_functional()
+    got = fft_result(p)
+    ref = np.fft.fft(re + 1j * im)
+    rel = np.abs(got - ref).max() / max(np.abs(ref).max(), 1)
+    assert rel < 0.01, rel
+
+
+@given(st.integers(2, 12), st.integers(2, 12))
+@settings(max_examples=10, deadline=None)
+def test_matmul_rectangular(n, m):
+    rng = np.random.default_rng(n * 100 + m)
+    A = rng.integers(-32, 32, (n, m)).astype(np.int32)
+    B = rng.integers(-32, 32, (m, n)).astype(np.int32)
+    p = build_matmul(CFG_BIG, A, B)
+    p.builder.run_functional()
+    want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+    assert np.array_equal(matmul_result(p, n, n), want)

@@ -1,0 +1,102 @@
+"""Cycle-simulator invariants (the paper's qualitative claims as
+properties) + hypothesis robustness over random programs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import KlessydraConfig
+from repro.core.isa import Instr, Scalar
+from repro.core.simulator import simulate
+from repro.core.workloads import composite_cycles, homogeneous_cycles
+
+
+def cfg_for(scheme, D=1):
+    M, F = {"shared": (1, 1), "sym": (3, 3), "het": (3, 1)}[scheme]
+    return KlessydraConfig(scheme, M=M, F=F, D=D)
+
+
+KERNELS = ("conv8", "conv32", "fft256", "matmul64")
+
+
+class TestSchemeInvariants:
+    @pytest.mark.parametrize("kernel", KERNELS)
+    def test_sym_fastest_shared_slowest(self, kernel):
+        c_shared = homogeneous_cycles(cfg_for("shared"), kernel)["avg_cycles"]
+        c_sym = homogeneous_cycles(cfg_for("sym"), kernel)["avg_cycles"]
+        c_het = homogeneous_cycles(cfg_for("het"), kernel)["avg_cycles"]
+        assert c_sym <= c_het <= c_shared
+
+    @pytest.mark.parametrize("scheme", ["shared", "sym", "het"])
+    def test_monotonic_in_dlp(self, scheme):
+        prev = None
+        for D in (1, 2, 4, 8):
+            c = homogeneous_cycles(cfg_for(scheme, D), "conv32")["avg_cycles"]
+            if prev is not None:
+                assert c <= prev * 1.001
+            prev = c
+
+    def test_het_tracks_sym_paper_claim(self):
+        # paper: het-MIMD within 1-7% of sym-MIMD (ours: <= 15% tolerance)
+        for D in (1, 8):
+            for kernel in ("conv32", "matmul64"):
+                s = homogeneous_cycles(cfg_for("sym", D), kernel)["avg_cycles"]
+                h = homogeneous_cycles(cfg_for("het", D), kernel)["avg_cycles"]
+                assert h / s < 1.15, (kernel, D, h / s)
+
+    def test_composite_het_tracks_sym(self):
+        s = composite_cycles(cfg_for("sym", 8))
+        h = composite_cycles(cfg_for("het", 8))
+        for k in ("conv32", "fft256", "matmul64"):
+            assert h[k] / s[k] < 1.10
+
+
+prog_item = st.one_of(
+    st.builds(lambda n: Scalar(n), st.integers(1, 10)),
+    st.builds(lambda op, ln: Instr(op, dst=0, src1=64,
+                                   src2=128 if op in ("kaddv", "kvmul") else None,
+                                   length=ln),
+              st.sampled_from(["kaddv", "kvmul", "ksvmulsc", "krelu"]),
+              st.integers(1, 64)),
+)
+
+
+class TestSimulatorRobustness:
+    @given(st.lists(st.lists(prog_item, max_size=12), min_size=1, max_size=3))
+    @settings(max_examples=30, deadline=None)
+    def test_terminates_and_bounds(self, programs):
+        cfg = KlessydraConfig("t", M=3, F=1, D=2)
+        res = simulate(cfg, programs)
+        # lower bound: every instruction needs >= 1 cycle of issue
+        n_instr = sum(i.count if isinstance(i, Scalar) else 1
+                      for p in programs for i in p)
+        assert res.cycles >= (n_instr > 0)
+        # upper bound: fully serialized everything
+        total_work = 0
+        for p in programs:
+            for i in p:
+                if isinstance(i, Scalar):
+                    total_work += i.count * cfg.harts
+                else:
+                    total_work += 16 + 2 * (i.length + cfg.D)
+        assert res.cycles <= total_work + 64
+
+    @given(st.integers(1, 4))
+    @settings(max_examples=8, deadline=None)
+    def test_more_harts_never_slower_per_kernel(self, reps):
+        """Running the same program on 1 vs 3 harts of a sym-MIMD machine:
+        3 harts must not take longer wall time than 3x serial."""
+        cfg = KlessydraConfig("t", M=3, F=3, D=2)
+        prog = [Scalar(3)] + [
+            Instr("kaddv", dst=0, src1=64, src2=128, length=32)
+            for _ in range(4 * reps)]
+        solo = simulate(cfg, [prog]).cycles
+        trio = simulate(cfg, [list(prog), list(prog), list(prog)]).cycles
+        assert trio <= 3 * solo + 16
+        assert trio >= solo                 # can't be faster than one copy
+
+
+class TestMetricsSanity:
+    def test_mfu_utilization_bounds(self):
+        for scheme in ("shared", "sym", "het"):
+            r = homogeneous_cycles(cfg_for(scheme, 4), "conv32")
+            assert 0.0 < r["mfu_util"] <= 3.001    # <= #harts engines busy
