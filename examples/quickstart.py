@@ -1,62 +1,70 @@
-"""Quickstart: the Klessydra-T vector ISA, three ways.
+"""Quickstart: write a KVI program ONCE, run it on three backends.
 
-  1. Functional KVI programs on the SPM model (the paper's core),
-  2. the cycle simulator across coprocessor schemes (the paper's Table 2),
-  3. the same ISA as Pallas TPU kernels (the SPM->VMEM adaptation).
+  1. Author a program with KviProgramBuilder (named virtual vector regs),
+  2. run it on the oracle (numpy), cyclesim (values + per-scheme cycle
+     counts, the paper's Table 2 protocol) and pallas (fused TPU kernels,
+     interpret mode on CPU) backends — same definition, three executors,
+  3. sweep the paper's coprocessor taxonomy on the canonical kernels.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.configs.base import KlessydraConfig, klessydra_taxonomy
-from repro.core.programs import (ProgramBuilder, build_conv2d, conv2d_oracle,
-                                 conv2d_result)
+from repro.configs.base import klessydra_taxonomy
 from repro.core.workloads import homogeneous_cycles
-from repro.kernels import ops
+from repro.kvi import KviProgramBuilder, available_backends, get_backend
+from repro.kvi.programs import conv2d_program, conv2d_result
 
 
-def kvi_program_demo():
-    print("=== 1. KVI program on the SPM (functional) ===")
-    cfg = KlessydraConfig("demo", M=1, F=1, D=4)
-    b = ProgramBuilder(cfg)
+def write_once_run_everywhere():
+    print("=== 1. One KVI program, three backends ===")
+    b = KviProgramBuilder("relu3x")
     x = np.arange(-8, 8, dtype=np.int32)
-    h = b.to_memory(x)
-    a_in = b.spm.alloc("in", 16)
-    a_out = b.spm.alloc("out", 16)
-    b.kmemld(a_in, h, 16)                        # load vector into SPM
-    b.emit("ksvmulsc", dst=a_out, src1=a_in, scalar=3, length=16)
-    b.emit("krelu", dst=a_out, src1=a_out, length=16)
-    hout = b.to_memory(np.zeros(16, np.int32))
-    b.kmemstr(hout, a_out, 16)                   # store back to memory
-    b.run_functional()
-    print("relu(3*x)  =", b.mem[hout])
+    hin = b.mem_in("x", x)
+    v = b.vreg("v", 16)
+    b.kmemld(v, hin)                       # load vector into the SPM
+    b.ksvmulsc(v, v, scalar=3)             # v = 3 * x
+    b.krelu(v, v)                          # v = relu(v)
+    hout = b.mem_out("y", 16)
+    b.kmemstr(hout, v)                     # store back to main memory
+    prog = b.build()
+
+    for name in ("oracle", "cyclesim", "pallas"):
+        res = get_backend(name).run(prog)
+        line = f"  {name:9s} relu(3*x) = {res.outputs['y'][:6]}..."
+        if res.cycles:
+            line += f"  cycles={res.cycles}"
+        print(line)
+    print("  registered backends:", sorted(available_backends()))
 
 
-def scheme_sweep_demo():
-    print("\n=== 2. Coprocessor scheme sweep (conv 32x32, 3x3) ===")
+def conv_differential():
+    print("\n=== 2. conv2d 8x8 (3x3 gaussian): oracle vs cyclesim vs "
+          "pallas ===")
+    rng = np.random.default_rng(0)
+    img = rng.integers(-64, 64, (8, 8)).astype(np.int32)
+    filt = np.asarray([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.int32)
+    prog = conv2d_program(img, filt, shift=4)
+
+    outs = {n: conv2d_result(get_backend(n).run(prog))
+            for n in ("oracle", "cyclesim", "pallas")}
+    assert np.array_equal(outs["oracle"], outs["cyclesim"])
+    assert np.array_equal(outs["oracle"], outs["pallas"])
+    print("  all three backends agree; corner:", outs["oracle"][0, :4])
+    timing = get_backend("cyclesim").run(prog).cycles
+    print("  cycles:", timing,
+          "(paper invariant: sym_mimd <= het_mimd <= shared)")
+
+
+def scheme_sweep():
+    print("\n=== 3. Coprocessor scheme sweep (conv 32x32, 3x3) ===")
     for name, cfg in klessydra_taxonomy().items():
         r = homogeneous_cycles(cfg, "conv32")
         print(f"  {cfg.name:16s} avg cycles/kernel = {r['avg_cycles']:8.0f} "
               f"(MFU util {r['mfu_util']:.2f})")
 
 
-def pallas_demo():
-    print("\n=== 3. The same ISA as Pallas TPU kernels (interpret mode) ===")
-    a = jnp.arange(-512, 512, dtype=jnp.int32)
-    b = jnp.ones(1024, jnp.int32) * 2
-    c = jnp.full((1024,), 100, jnp.int32)
-    fused = ops.fused_mac_relu(a, b, c, shift=1)   # relu((a*b + c) >> 1)
-    print("  fused_mac_relu tail:", np.asarray(fused[-4:]))
-    print("  kdotp  :", int(ops.kdotp(a, b)))
-    img = jnp.asarray(np.random.default_rng(0).integers(-64, 64, (32, 32)),
-                      jnp.int32)
-    filt = jnp.asarray([[1, 2, 1], [2, 4, 2], [1, 2, 1]], jnp.int32)
-    out = ops.conv2d_op(img, filt, shift=4)
-    print("  spm_conv2d (gaussian) corner:", np.asarray(out[:2, :2]))
-
-
 if __name__ == "__main__":
-    kvi_program_demo()
-    scheme_sweep_demo()
-    pallas_demo()
+    write_once_run_everywhere()
+    conv_differential()
+    scheme_sweep()

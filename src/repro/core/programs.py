@@ -1,19 +1,22 @@
-"""The paper's computation kernels written as KVI vector programs.
+"""DEPRECATED authoring layer — the paper's kernels now live in
+``repro.kvi.programs`` as backend-neutral :class:`~repro.kvi.ir.KviProgram`
+definitions (authored once, executed on the oracle / cyclesim / pallas
+backends).
 
-A ``ProgramBuilder`` owns an SpmSpace + main-memory dict and emits the
-dynamic instruction trace (Instr/Scalar items). The same trace drives
-  (a) the cycle simulator (timing), and
-  (b) the functional Mfu executor (correctness vs numpy oracles).
+This module remains as a thin compatibility shim for one release:
 
-Kernels (paper §PERFORMANCE RESULTS): 2D convolution (3x3..11x11 filters,
-zero padding, fixed-point post-scaling), radix-2 DIF FFT-256 (Q15 twiddles,
-contiguous-half butterflies, final bit-reversal), MatMul 64x64 (row-vector
-accumulation). 32-bit fixed point throughout, as in the paper.
+  * ``build_conv2d`` / ``build_fft`` / ``build_matmul`` return the legacy
+    :class:`Program` (an ``Instr``/``Scalar`` trace bound to one config),
+    now produced by lowering the canonical KVI programs — traces are
+    item-for-item identical to the pre-IR builders.
+  * ``ProgramBuilder`` still works for hand-rolled traces but emits a
+    ``DeprecationWarning``; use :class:`repro.kvi.KviProgramBuilder`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+import warnings
+from dataclasses import dataclass
+from typing import Dict, List, Union
 
 import numpy as np
 
@@ -21,6 +24,10 @@ from repro.configs.base import KlessydraConfig
 from repro.core.isa import Instr, Scalar
 from repro.core.mfu import Mfu
 from repro.core.spm import SpmSpace
+
+# NOTE: repro.kvi is imported lazily inside the shim builders below —
+# repro.kvi.lowering imports repro.core.isa, so a module-level import here
+# would make the two packages circular.
 
 Item = Union[Instr, Scalar]
 
@@ -38,10 +45,39 @@ class Program:
                    for i in self.items)
 
 
-class ProgramBuilder:
-    """Emit-and-execute assembler for KVI programs."""
+def _run_items(items, spm: SpmSpace, mem: Dict[int, np.ndarray]):
+    """Replay a trace on the SPM/main-memory model, spilling register-file
+    reduction results (``rf_store``) back into the SPM. (Shared with
+    ``repro.kvi.lowering.LoweredTrace.execute``; rf_store is the new
+    3-tuple ``(addr, elem_index, elem_bytes)`` or the legacy 2-tuple.)"""
+    mfu = Mfu(spm, mem)
+    for it in items:
+        if isinstance(it, Instr):
+            r = mfu.execute(it)
+            tgt = getattr(it, "rf_store", None)
+            if tgt is not None and r is not None:
+                addr, j, eb = tgt if len(tgt) == 3 else (*tgt, 4)
+                dt = {1: np.int8, 2: np.int16, 4: np.int32}[eb]
+                # wrap to the destination width like the hardware store
+                # (np >= 2 raises on out-of-range python ints otherwise)
+                spm.write(addr + eb * j, np.array([r], np.int64).astype(dt))
+    return mem
 
-    def __init__(self, config: KlessydraConfig):
+
+class ProgramBuilder:
+    """Emit-and-execute assembler for KVI traces.
+
+    .. deprecated:: use :class:`repro.kvi.KviProgramBuilder` — it produces
+       a backend-neutral program instead of a config-bound trace.
+    """
+
+    def __init__(self, config: KlessydraConfig, _warn: bool = True):
+        if _warn:
+            warnings.warn(
+                "repro.core.programs.ProgramBuilder is deprecated; author "
+                "programs with repro.kvi.KviProgramBuilder and run them "
+                "through repro.kvi.get_backend(...)",
+                DeprecationWarning, stacklevel=2)
         self.cfg = config
         self.spm = SpmSpace(config)
         self.mem: Dict[int, np.ndarray] = {}
@@ -77,83 +113,57 @@ class ProgramBuilder:
 
     def run_functional(self) -> Dict[int, np.ndarray]:
         """Execute the trace on the SPM/main-memory model."""
-        mfu = Mfu(self.spm, self.mem)
-        for it in self.items:
-            if isinstance(it, Instr):
-                r = mfu.execute(it)
-                tgt = getattr(it, "rf_store", None)
-                if tgt is not None and r is not None:
-                    addr, j = tgt
-                    self.spm.write(addr + 4 * j, np.array([r], np.int32))
-        return self.mem
+        return _run_items(self.items, self.spm, self.mem)
+
+
+def _legacy_program(kvi_prog, cfg: KlessydraConfig) -> Program:
+    """Lower a KVI program to one config and wrap it in the legacy
+    ``Program``/``ProgramBuilder`` shape existing call sites expect."""
+    from repro.kvi.lowering import lower
+    trace = lower(kvi_prog, cfg)
+    pb = ProgramBuilder(cfg, _warn=False)
+    pb.spm = trace.spm
+    pb.mem = trace.mem
+    pb._mem_next = len(trace.mem)
+    pb.items = trace.items
+    prog = Program(kvi_prog.name, trace.items, kvi_prog.alg_ops, pb)
+    prog.kvi_program = kvi_prog
+    prog.trace = trace
+    return prog
 
 
 # ---------------------------------------------------------------------------
-# MatMul. Two code paths, chosen by SPM capacity exactly as a programmer
-# would (paper: N=3 SPMs for MatMul, so a 64x64 int32 B [16 KiB] does NOT
-# fit the 3x4 KiB scratchpads and must be streamed — this is what makes the
-# paper's MatMul saturate at high DLP):
-#   * resident: B held in SPM, row-vector accumulation (ksvmulsc + kaddv)
-#   * streamed: A rows resident, B^T columns streamed per output element,
-#     kdotp per element (vector MAC through the multiplier + adder tree)
+# Legacy builders — now shims over repro.kvi.programs
 # ---------------------------------------------------------------------------
 
 def build_matmul(cfg: KlessydraConfig, A: np.ndarray, B: np.ndarray,
                  shift: int = 0) -> Program:
-    n, m = A.shape
-    _, p = B.shape
-    b = ProgramBuilder(cfg)
-    b_bytes = m * p * 4
-    resident = b_bytes + (2 * p + n) * 4 <= b.spm.total_bytes
+    from repro.kvi.programs import matmul_program
+    spm_bytes = cfg.N * cfg.spm_kbytes * 1024
+    kp = matmul_program(A, B, shift=shift, spm_bytes=spm_bytes)
+    return _legacy_program(kp, cfg)
 
-    if resident:
-        hB = b.to_memory(B.astype(np.int32))
-        aB = b.spm.alloc("B", m * p)
-        acc = b.spm.alloc("acc", p)
-        tmp = b.spm.alloc("tmp", p)
-        b.scalar(40)                              # kernel prologue
-        b.kmemld(aB, hB, m * p)
-        for i in range(n):
-            b.scalar(3)                           # row loop bookkeeping
-            for k in range(m):
-                b.scalar(2)                       # a-scalar load + addr bump
-                aik = int(A[i, k])
-                row = aB + 4 * p * k
-                if k == 0:
-                    b.emit("ksvmulsc", dst=acc, src1=row, scalar=aik, length=p)
-                else:
-                    b.emit("ksvmulsc", dst=tmp, src1=row, scalar=aik, length=p)
-                    b.emit("kaddv", dst=acc, src1=acc, src2=tmp, length=p)
-            if shift:
-                b.emit("ksrav", dst=acc, src1=acc, scalar=shift, length=p)
-            hrow = b.to_memory(np.zeros(p, np.int32))
-            b.kmemstr(hrow, acc, p)
-        return b.finish(f"matmul{n}x{p}", alg_ops=2 * n * m * p)
 
-    # streamed path: per output element, kdotp(A_row, B_col)
-    Bt = np.ascontiguousarray(B.astype(np.int32).T)
-    arow = b.spm.alloc("arow", m)
-    acol = b.spm.alloc("bcol", m)
-    acc = b.spm.alloc("acc", p)
-    b.scalar(40)                                  # kernel prologue
-    for i in range(n):
-        b.scalar(3)
-        hA = b.to_memory(A[i].astype(np.int32))
-        b.kmemld(arow, hA, m)
-        for j in range(p):
-            b.scalar(3)                           # col pointer, loop, store rd
-            hcol = b.to_memory(Bt[j])
-            b.kmemld(acol, hcol, m)
-            op = "kdotpps" if shift else "kdotp"
-            d = b.emit(op, src1=arow, src2=acol, scalar=shift, length=m)
-            # register-file result written to acc[j] via LSU-free move:
-            # modelled as one scalar instruction (sw to SPM)
-            b.scalar(1)
-            d.rf_store = (acc, j)
-        hrow = b.to_memory(np.zeros(p, np.int32))
-        b.kmemstr(hrow, acc, p)
-    return b.finish(f"matmul{n}x{p}", alg_ops=2 * n * m * p)
+def build_conv2d(cfg: KlessydraConfig, img: np.ndarray, filt: np.ndarray,
+                 shift: int = 0) -> Program:
+    from repro.kvi.programs import conv2d_program
+    kp = conv2d_program(img, filt, shift=shift)
+    return _legacy_program(kp, cfg)
 
+
+def build_fft(cfg: KlessydraConfig, x_re: np.ndarray,
+              x_im: np.ndarray) -> Program:
+    from repro.kvi.programs import fft_program
+    kp = fft_program(x_re, x_im)
+    prog = _legacy_program(kp, cfg)
+    prog.out_handles = (prog.trace.out_handles["out_re"],
+                        prog.trace.out_handles["out_im"])
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Result collectors (trace-level, unchanged API)
+# ---------------------------------------------------------------------------
 
 def matmul_result(prog: Program, n: int, p: int) -> np.ndarray:
     """Collect the per-row kmemstr outputs back into a matrix."""
@@ -162,46 +172,6 @@ def matmul_result(prog: Program, n: int, p: int) -> np.ndarray:
         if isinstance(it, Instr) and it.op == "kmemstr":
             rows.append(prog.builder.mem[it.dst])
     return np.stack(rows[-n:], axis=0)
-
-
-# ---------------------------------------------------------------------------
-# 2D convolution, FxF filter, zero padding, fixed-point post-scale
-# ---------------------------------------------------------------------------
-
-def build_conv2d(cfg: KlessydraConfig, img: np.ndarray, filt: np.ndarray,
-                 shift: int = 0) -> Program:
-    S = img.shape[0]
-    F = filt.shape[0]
-    pad = F // 2
-    Sp = S + 2 * pad
-    padded = np.zeros((Sp, Sp), np.int32)
-    padded[pad:pad + S, pad:pad + S] = img
-    b = ProgramBuilder(cfg)
-    hin = b.to_memory(padded)
-    ain = b.spm.alloc("in", Sp * Sp)
-    acc = b.spm.alloc("acc", S)
-    tmp = b.spm.alloc("tmp", S)
-    b.scalar(40)                                  # kernel prologue
-    b.kmemld(ain, hin, Sp * Sp)
-    for i in range(S):
-        b.scalar(6)                               # row loop bookkeeping
-        first = True
-        for fr in range(F):
-            for fc in range(F):
-                w = int(filt[fr, fc])
-                src = ain + 4 * ((i + fr) * Sp + fc)
-                b.scalar(3)
-                if first:
-                    b.emit("ksvmulsc", dst=acc, src1=src, scalar=w, length=S)
-                    first = False
-                else:
-                    b.emit("ksvmulsc", dst=tmp, src1=src, scalar=w, length=S)
-                    b.emit("kaddv", dst=acc, src1=acc, src2=tmp, length=S)
-        if shift:
-            b.emit("ksrav", dst=acc, src1=acc, scalar=shift, length=S)
-        hrow = b.to_memory(np.zeros(S, np.int32))
-        b.kmemstr(hrow, acc, S)
-    return b.finish(f"conv{S}x{S}_f{F}", alg_ops=2 * S * S * F * F)
 
 
 def conv2d_result(prog: Program, S: int) -> np.ndarray:
@@ -224,96 +194,7 @@ def conv2d_oracle(img: np.ndarray, filt: np.ndarray, shift: int = 0):
     return (out >> shift).astype(np.int32) if shift else out.astype(np.int32)
 
 
-# ---------------------------------------------------------------------------
-# FFT-256: radix-2 DIF, contiguous-half butterflies, Q15 twiddles,
-# final bit-reversal (element copies — deliberately DLP-unfriendly,
-# matching the paper's observation that FFT gains come from TLP).
-# ---------------------------------------------------------------------------
-
-Q = 15
-
-
-def _twiddles(m: int) -> tuple:
-    k = np.arange(m // 2)
-    w = np.exp(-2j * np.pi * k / m)
-    return ((w.real * (1 << Q)).astype(np.int32),
-            (w.imag * (1 << Q)).astype(np.int32))
-
-
-def build_fft(cfg: KlessydraConfig, x_re: np.ndarray,
-              x_im: np.ndarray) -> Program:
-    n = len(x_re)
-    assert n & (n - 1) == 0
-    b = ProgramBuilder(cfg)
-    hre = b.to_memory(x_re.astype(np.int32))
-    him = b.to_memory(x_im.astype(np.int32))
-    are = b.spm.alloc("re", n)
-    aim = b.spm.alloc("im", n)
-    t1 = b.spm.alloc("t1", n // 2)
-    t2 = b.spm.alloc("t2", n // 2)
-    dre = b.spm.alloc("dre", n // 2)
-    dim = b.spm.alloc("dim", n // 2)
-    # per-size twiddle vectors, loaded once
-    tw_addr = {}
-    m = n
-    while m >= 2:
-        wre, wim = _twiddles(m)
-        ar = b.spm.alloc(f"wre{m}", m // 2)
-        ai = b.spm.alloc(f"wim{m}", m // 2)
-        b.kmemld(ar, b.to_memory(wre), m // 2)
-        b.kmemld(ai, b.to_memory(wim), m // 2)
-        tw_addr[m] = (ar, ai)
-        m //= 2
-    b.scalar(40)                                  # kernel prologue
-    b.kmemld(are, hre, n)
-    b.kmemld(aim, him, n)
-
-    def butterfly(base: int, m: int):
-        """DIF butterfly on the contiguous block [base, base+m)."""
-        h = m // 2
-        lo_re, hi_re = are + 4 * base, are + 4 * (base + h)
-        lo_im, hi_im = aim + 4 * base, aim + 4 * (base + h)
-        wre, wim = tw_addr[m]
-        b.scalar(6)
-        # d = lo - hi (complex), top = lo + hi
-        b.emit("ksubv", dst=dre, src1=lo_re, src2=hi_re, length=h)
-        b.emit("ksubv", dst=dim, src1=lo_im, src2=hi_im, length=h)
-        b.emit("kaddv", dst=lo_re, src1=lo_re, src2=hi_re, length=h)
-        b.emit("kaddv", dst=lo_im, src1=lo_im, src2=hi_im, length=h)
-        # hi = d * w  (Q15)
-        b.emit("kvmul", dst=t1, src1=dre, src2=wre, length=h)
-        b.emit("ksrav", dst=t1, src1=t1, scalar=Q, length=h)
-        b.emit("kvmul", dst=t2, src1=dim, src2=wim, length=h)
-        b.emit("ksrav", dst=t2, src1=t2, scalar=Q, length=h)
-        b.emit("ksubv", dst=hi_re, src1=t1, src2=t2, length=h)
-        b.emit("kvmul", dst=t1, src1=dre, src2=wim, length=h)
-        b.emit("ksrav", dst=t1, src1=t1, scalar=Q, length=h)
-        b.emit("kvmul", dst=t2, src1=dim, src2=wre, length=h)
-        b.emit("ksrav", dst=t2, src1=t2, scalar=Q, length=h)
-        b.emit("kaddv", dst=hi_im, src1=t1, src2=t2, length=h)
-
-    m = n
-    while m >= 2:
-        for base in range(0, n, m):
-            butterfly(base, m)
-        m //= 2
-
-    # bit-reversal reorder via element copies (vector length 1)
-    nb = int(np.log2(n))
-    out_re = b.spm.alloc("out_re", n)
-    out_im = b.spm.alloc("out_im", n)
-    for i in range(n):
-        j = int(f"{i:0{nb}b}"[::-1], 2)
-        b.scalar(2)
-        b.emit("kvcp", dst=out_re + 4 * j, src1=are + 4 * i, length=1)
-        b.emit("kvcp", dst=out_im + 4 * j, src1=aim + 4 * i, length=1)
-    ore = b.to_memory(np.zeros(n, np.int32))
-    oim = b.to_memory(np.zeros(n, np.int32))
-    b.kmemstr(ore, out_re, n)
-    b.kmemstr(oim, out_im, n)
-    prog = b.finish(f"fft{n}", alg_ops=10 * (n // 2) * nb)
-    prog.out_handles = (ore, oim)
-    return prog
+Q = 15                               # Q15 twiddle format (kvi.programs.Q)
 
 
 def fft_result(prog: Program) -> np.ndarray:

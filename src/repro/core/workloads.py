@@ -12,32 +12,41 @@ import numpy as np
 
 from repro.configs.base import KlessydraConfig, klessydra_taxonomy
 from repro.core import baselines
-from repro.core.programs import (Program, build_conv2d, build_fft,
-                                 build_matmul)
 from repro.core.simulator import simulate
 
 RNG = np.random.default_rng(42)
 
 
+def _lower_items(prog, cfg):
+    """Bind a backend-neutral KviProgram to ``cfg`` and return its
+    Instr/Scalar trace (lazy import: repro.kvi imports repro.core.isa)."""
+    from repro.kvi.lowering import lower
+    return lower(prog, cfg).items
+
+
 def _conv_prog(cfg, S=32, F=3, seed=0):
+    from repro.kvi.programs import conv2d_program
     rng = np.random.default_rng(seed)
     img = rng.integers(-128, 128, (S, S)).astype(np.int32)
     filt = rng.integers(-8, 8, (F, F)).astype(np.int32)
-    return build_conv2d(cfg, img, filt, shift=4)
+    return conv2d_program(img, filt, shift=4)
 
 
 def _fft_prog(cfg, n=256, seed=0):
+    from repro.kvi.programs import fft_program
     rng = np.random.default_rng(seed)
     re = rng.integers(-2048, 2048, n).astype(np.int32)
     im = rng.integers(-2048, 2048, n).astype(np.int32)
-    return build_fft(cfg, re, im)
+    return fft_program(re, im)
 
 
 def _matmul_prog(cfg, n=64, seed=0):
+    from repro.kvi.programs import matmul_program
     rng = np.random.default_rng(seed)
     A = rng.integers(-64, 64, (n, n)).astype(np.int32)
     B = rng.integers(-64, 64, (n, n)).astype(np.int32)
-    return build_matmul(cfg, A, B, shift=4)
+    return matmul_program(A, B, shift=4,
+                          spm_bytes=cfg.N * cfg.spm_kbytes * 1024)
 
 
 KERNEL_BUILDERS: Dict[str, Callable] = {
@@ -65,8 +74,11 @@ BASELINE_ARGS = {
 
 
 def homogeneous_cycles(cfg: KlessydraConfig, kernel: str) -> dict:
-    """All harts run `kernel` on different data; avg cycles per kernel."""
-    progs = [KERNEL_BUILDERS[kernel](cfg, seed=h).items for h in range(cfg.harts)]
+    """All harts run `kernel` on different data; avg cycles per kernel.
+    KERNEL_BUILDERS produce backend-neutral KviPrograms; timing binds them
+    to ``cfg`` via repro.kvi.lowering."""
+    progs = [_lower_items(KERNEL_BUILDERS[kernel](cfg, seed=h), cfg)
+             for h in range(cfg.harts)]
     res = simulate(cfg, progs)
     return {"avg_cycles": res.cycles / cfg.harts, "total_cycles": res.cycles,
             "mfu_util": res.mfu_utilization}
@@ -81,7 +93,9 @@ def composite_cycles(cfg: KlessydraConfig, reps: Optional[Dict[str, int]] = None
     for h, kern in enumerate(("conv32", "fft256", "matmul64")):
         items = []
         for r in range(reps[kern]):
-            items.extend(KERNEL_BUILDERS[kern](cfg, seed=100 * h + r).items)
+            items.extend(
+                _lower_items(KERNEL_BUILDERS[kern](cfg, seed=100 * h + r),
+                             cfg))
         progs.append(items)
     res = simulate(cfg, progs)
     out = {}

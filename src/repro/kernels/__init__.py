@@ -10,5 +10,8 @@ het_mimd               — composite-workload kernel (grid slot = hart,
 Every kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, jitted
 wrapper in ops.py, pure-jnp oracle in ref.py, interpret-mode validation in
 tests/kernels/.
+
+(Submodules are imported explicitly — ``from repro.kernels import ops`` —
+rather than eagerly here: ops.py builds on repro.kvi.pallas_backend, which
+itself uses repro.kernels.common, so an eager import would be circular.)
 """
-from repro.kernels import ops, ref

@@ -1,26 +1,20 @@
-"""Fused element-wise KVI vector programs in VMEM (the paper's Table-1 ISA,
-TPU-native).
+"""DEPRECATED — the untyped tuple protocol for fused element-wise KVI
+programs. Superseded by the typed IR in ``repro.kvi`` (author programs
+with :class:`repro.kvi.KviProgramBuilder`, run them on the ``pallas``
+backend) and, at this level, by
+:func:`repro.kvi.pallas_backend.fused_elementwise_call`.
 
-The Klessydra insight: vector operands live in the SPM across a whole
-*sequence* of vector instructions — no round-trip to main memory between
-kaddv/kvmul/krelu/... . The TPU analogue: one pallas_call executes a small
-KVI *program* over VMEM-resident tiles; intermediate "SPM regions" are
-registers inside the kernel, HBM is touched once per input and once per
-output regardless of program length.
-
-Program encoding: tuple of (op, dst, src1, src2, imm) acting on a slot
-file; slots [0..n_inputs) are preloaded with the input tiles.
+Kept for one release so existing call sites keep working; ``run_vops``
+now just adapts the tuple encoding onto the new executor and warns.
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, pick_block
+from repro.kvi.pallas_backend import apply_vop, fused_elementwise_call
 
 # (op, dst_slot, src1_slot, src2_slot_or_None, immediate)
 VOp = Tuple[str, int, int, Optional[int], int]
@@ -28,47 +22,7 @@ VOp = Tuple[str, int, int, Optional[int], int]
 _ELEMWISE = {"kaddv", "ksubv", "kvmul", "ksvaddsc", "ksvmulsc", "ksrlv",
              "ksrav", "krelu", "kvslt", "ksvslt", "kvcp"}
 
-
-def apply_vop(op: str, a, b, imm: int):
-    """Shared semantics (used by both the kernel body and the jnp oracle).
-    int32 wrap-around arithmetic like the Klessydra MFU."""
-    if op == "kaddv":
-        return a + b
-    if op == "ksubv":
-        return a - b
-    if op == "kvmul":
-        return a * b
-    if op == "ksvaddsc":
-        return a + jnp.asarray(imm, a.dtype)
-    if op == "ksvmulsc":
-        return a * jnp.asarray(imm, a.dtype)
-    if op == "ksrlv":
-        ua = a.astype(jnp.uint32)
-        return (ua >> jnp.uint32(imm)).astype(a.dtype)
-    if op == "ksrav":
-        return a >> jnp.asarray(imm, a.dtype)
-    if op == "krelu":
-        return jnp.maximum(a, jnp.asarray(0, a.dtype))
-    if op == "kvslt":
-        return (a < b).astype(a.dtype)
-    if op == "ksvslt":
-        return (a < jnp.asarray(imm, a.dtype)).astype(a.dtype)
-    if op == "kvcp":
-        return a
-    raise ValueError(op)
-
-
-def _vops_kernel(*refs, program: Tuple[VOp, ...], n_in: int, n_slots: int,
-                 out_slot: int):
-    in_refs, out_ref = refs[:n_in], refs[n_in]
-    slots: List = [None] * n_slots
-    for i, r in enumerate(in_refs):
-        slots[i] = r[...]
-    for op, dst, s1, s2, imm in program:
-        a = slots[s1]
-        b = slots[s2] if s2 is not None else None
-        slots[dst] = apply_vop(op, a, b, imm)
-    out_ref[...] = slots[out_slot]
+__all__ = ["VOp", "apply_vop", "run_vops"]
 
 
 def run_vops(program: Sequence[VOp], inputs: Sequence[jax.Array],
@@ -76,29 +30,25 @@ def run_vops(program: Sequence[VOp], inputs: Sequence[jax.Array],
              block: int = 1024, interpret: bool = None) -> jax.Array:
     """Execute a KVI element-wise program over equal-shaped input vectors.
 
-    All inputs are reshaped to (n/block, block) tiles; the program runs
-    fused per tile (one HBM read per input, one write total)."""
+    .. deprecated:: use ``repro.kvi`` (typed IR + pallas backend); this
+       shim forwards to
+       :func:`repro.kvi.pallas_backend.fused_elementwise_call`.
+    """
+    warnings.warn(
+        "repro.kernels.kvi_vops.run_vops is deprecated; build a typed "
+        "program with repro.kvi.KviProgramBuilder or call "
+        "repro.kvi.pallas_backend.fused_elementwise_call directly",
+        DeprecationWarning, stacklevel=2)
     program = tuple(program)
     for op, *_ in program:
         if op not in _ELEMWISE:
             raise ValueError(f"{op} is not an element-wise KVI op")
-    x0 = inputs[0]
-    n = x0.size
-    flat = [jnp.ravel(x) for x in inputs]
     if n_slots is None:
         n_slots = max([len(inputs)] + [o[1] + 1 for o in program])
     if out_slot is None:
         out_slot = program[-1][1]
-    bl = pick_block(n, block, align=8)
-    assert n % bl == 0, (n, bl)
-
-    out = pl.pallas_call(
-        functools.partial(_vops_kernel, program=program, n_in=len(inputs),
-                          n_slots=n_slots, out_slot=out_slot),
-        grid=(n // bl,),
-        in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0)) for _ in flat],
-        out_specs=pl.BlockSpec((1, bl), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n // bl, bl), x0.dtype),
-        interpret=INTERPRET if interpret is None else interpret,
-    )(*[x.reshape(n // bl, bl) for x in flat])
+    x0 = inputs[0]
+    out, = fused_elementwise_call(program, list(enumerate(inputs)),
+                                  [out_slot], n_slots=n_slots, block=block,
+                                  interpret=interpret)
     return out.reshape(x0.shape)

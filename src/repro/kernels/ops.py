@@ -12,56 +12,64 @@ import jax.numpy as jnp
 
 from repro.kernels import kdotp as _kdotp
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.kvi_vops import VOp, run_vops
 from repro.kernels.spm_conv2d import spm_conv2d
 from repro.kernels.spm_fft import spm_fft
 from repro.kernels.spm_matmul import spm_matmul
+from repro.kvi.pallas_backend import fused_elementwise_call
 
 
-# ---- KVI element-wise intrinsics (single-op programs) ----------------------
+# ---- KVI element-wise intrinsics (single-op / fused slot programs) ---------
+
+def _ew(program, inputs):
+    """One fused pallas_call over the slot program; inputs occupy slots
+    0..n-1, the last op's dst slot is the result."""
+    out, = fused_elementwise_call(program, list(enumerate(inputs)),
+                                  [program[-1][1]])
+    return out.reshape(inputs[0].shape)
+
 
 def kaddv(a, b):
-    return run_vops([("kaddv", 2, 0, 1, 0)], [a, b])
+    return _ew([("kaddv", 2, 0, 1, 0)], [a, b])
 
 
 def ksubv(a, b):
-    return run_vops([("ksubv", 2, 0, 1, 0)], [a, b])
+    return _ew([("ksubv", 2, 0, 1, 0)], [a, b])
 
 
 def kvmul(a, b):
-    return run_vops([("kvmul", 2, 0, 1, 0)], [a, b])
+    return _ew([("kvmul", 2, 0, 1, 0)], [a, b])
 
 
 def krelu(a):
-    return run_vops([("krelu", 1, 0, None, 0)], [a])
+    return _ew([("krelu", 1, 0, None, 0)], [a])
 
 
 def ksvaddsc(a, imm: int):
-    return run_vops([("ksvaddsc", 1, 0, None, imm)], [a])
+    return _ew([("ksvaddsc", 1, 0, None, imm)], [a])
 
 
 def ksvmulsc(a, imm: int):
-    return run_vops([("ksvmulsc", 1, 0, None, imm)], [a])
+    return _ew([("ksvmulsc", 1, 0, None, imm)], [a])
 
 
 def ksrlv(a, imm: int):
-    return run_vops([("ksrlv", 1, 0, None, imm)], [a])
+    return _ew([("ksrlv", 1, 0, None, imm)], [a])
 
 
 def ksrav(a, imm: int):
-    return run_vops([("ksrav", 1, 0, None, imm)], [a])
+    return _ew([("ksrav", 1, 0, None, imm)], [a])
 
 
 def kvslt(a, b):
-    return run_vops([("kvslt", 2, 0, 1, 0)], [a, b])
+    return _ew([("kvslt", 2, 0, 1, 0)], [a, b])
 
 
 def ksvslt(a, imm: int):
-    return run_vops([("ksvslt", 1, 0, None, imm)], [a])
+    return _ew([("ksvslt", 1, 0, None, imm)], [a])
 
 
 def kvcp(a):
-    return run_vops([("kvcp", 1, 0, None, 0)], [a])
+    return _ew([("kvcp", 1, 0, None, 0)], [a])
 
 
 # fused example: relu(a*w + b) >> s — one HBM pass, four KVI ops in VMEM
@@ -70,7 +78,7 @@ def fused_mac_relu(a, w, b, shift: int):
             ("kaddv", 3, 3, 2, 0),
             ("ksrav", 3, 3, None, shift),
             ("krelu", 3, 3, None, 0)]
-    return run_vops(prog, [a, w, b])
+    return _ew(prog, [a, w, b])
 
 
 # ---- reductions -------------------------------------------------------------

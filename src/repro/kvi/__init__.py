@@ -1,0 +1,29 @@
+"""repro.kvi — the unified KVI program IR + pluggable execution backends.
+
+Author a vector program once with :class:`KviProgramBuilder`, then run it
+on any registered backend:
+
+========== ==================================================== =========
+name       implementation                                       timing
+========== ==================================================== =========
+oracle     pure numpy (repro.core.mfu)                          no
+cyclesim   event-driven simulator, 3 coprocessor schemes        SimResult
+pallas     fused pl.pallas_call kernels (TPU / interpret)       no
+========== ==================================================== =========
+
+See ``repro.kvi.programs`` for the paper's conv2d / FFT-256 / matmul
+kernels on this API, and README.md for the full protocol description.
+"""
+from repro.kvi.backend import (Backend, BackendResult, available_backends,
+                               get_backend, register_backend)
+from repro.kvi.ir import (ELEMWISE_OPS, MEM_OPS, REDUCTION_OPS, KviInstr,
+                          KviOp, KviProgram, KviProgramBuilder, MemRef,
+                          Ref, ScalarBlock, VReg, View)
+from repro.kvi.lowering import LoweredTrace, lower
+
+__all__ = [
+    "Backend", "BackendResult", "available_backends", "get_backend",
+    "register_backend", "KviInstr", "KviOp", "KviProgram",
+    "KviProgramBuilder", "MemRef", "Ref", "ScalarBlock", "VReg", "View",
+    "ELEMWISE_OPS", "MEM_OPS", "REDUCTION_OPS", "LoweredTrace", "lower",
+]

@@ -1,0 +1,103 @@
+"""The pluggable execution-backend protocol for KVI programs.
+
+A :class:`Backend` takes one :class:`~repro.kvi.ir.KviProgram` and returns
+a :class:`BackendResult` — output buffers by name, plus (for timing-aware
+backends) per-scheme :class:`~repro.core.simulator.SimResult` objects.
+
+Backends self-register under a short name::
+
+    @register_backend("oracle")
+    class OracleBackend: ...
+
+    get_backend("oracle").run(program)
+
+``available_backends()`` lists what is importable in this environment (the
+Pallas backend needs jax; the registry degrades gracefully without it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.kvi.ir import KviProgram
+
+
+@dataclass
+class BackendResult:
+    """What one backend run produced.
+
+    outputs — every ``mem_out`` buffer of the program, by name, reshaped
+              to its declared shape.
+    timing  — scheme name -> SimResult (cycle backend only; the paper's
+              shared / symmetric-MIMD / heterogeneous-MIMD schemes).
+    backend — the producing backend's registered name.
+    """
+
+    backend: str
+    outputs: Dict[str, np.ndarray]
+    timing: Optional[Dict[str, "object"]] = None
+
+    @property
+    def cycles(self) -> Optional[Dict[str, int]]:
+        if self.timing is None:
+            return None
+        return {k: v.cycles for k, v in self.timing.items()}
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Anything that can execute a KviProgram."""
+
+    name: str
+
+    def run(self, program: KviProgram) -> BackendResult:
+        ...
+
+
+_REGISTRY: Dict[str, Callable[..., Backend]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator registering a backend factory under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str, **kwargs) -> Backend:
+    """Instantiate a registered backend (kwargs forwarded to the ctor)."""
+    _ensure_builtin_backends()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; available: "
+                       f"{sorted(_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+def available_backends() -> Dict[str, Callable[..., Backend]]:
+    _ensure_builtin_backends()
+    return dict(_REGISTRY)
+
+
+_BOOTED = False
+
+
+def _ensure_builtin_backends():
+    """Import the built-in backend modules so their ``@register_backend``
+    decorators run. The Pallas backend is optional (requires jax)."""
+    global _BOOTED
+    if _BOOTED:
+        return
+    _BOOTED = True
+    from repro.kvi import cyclesim, oracle  # noqa: F401  (side-effect import)
+    try:
+        from repro.kvi import pallas_backend  # noqa: F401
+    except ImportError:                        # pragma: no cover - no jax
+        pass

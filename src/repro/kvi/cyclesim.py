@@ -1,0 +1,60 @@
+"""CycleSimBackend — functional values + cycle timing for the paper's
+three coprocessor schemes (repro.core.simulator).
+
+One ``run()`` returns both:
+  * outputs  — bit-identical to the oracle backend (same Mfu execution of
+               the same lowered trace), and
+  * timing   — scheme name -> SimResult for shared (M=1,F=1),
+               symmetric MIMD (M=3,F=3) and heterogeneous MIMD (M=3,F=1),
+               each with the program replicated on all harts (the paper's
+               homogeneous-workload protocol).
+
+Paper invariant (validated in tests):
+    sym-MIMD cycles <= het-MIMD cycles <= shared cycles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.configs.base import KlessydraConfig
+from repro.core.simulator import SimResult, simulate
+from repro.kvi.backend import BackendResult, register_backend
+from repro.kvi.ir import KviProgram
+from repro.kvi.lowering import lower
+
+
+def default_schemes(D: int = 4, spm_kbytes: int = 64,
+                    ) -> Dict[str, KlessydraConfig]:
+    """The paper's three coprocessor schemes at one DLP width."""
+    return {
+        "shared": KlessydraConfig("shared", M=1, F=1, D=D,
+                                  spm_kbytes=spm_kbytes),
+        "sym_mimd": KlessydraConfig("sym_mimd", M=3, F=3, D=D,
+                                    spm_kbytes=spm_kbytes),
+        "het_mimd": KlessydraConfig("het_mimd", M=3, F=1, D=D,
+                                    spm_kbytes=spm_kbytes),
+    }
+
+
+@register_backend("cyclesim")
+class CycleSimBackend:
+    """Values + per-scheme cycle counts from the event-driven simulator."""
+
+    def __init__(self,
+                 schemes: Optional[Dict[str, KlessydraConfig]] = None,
+                 replicate_harts: bool = True):
+        self.schemes = schemes or default_schemes()
+        self.replicate_harts = replicate_harts
+
+    def run(self, program: KviProgram) -> BackendResult:
+        timing: Dict[str, SimResult] = {}
+        outputs = None
+        for scheme, cfg in self.schemes.items():
+            trace = lower(program, cfg)
+            if outputs is None:
+                # functional values: same trace + Mfu path as the oracle,
+                # so Oracle == CycleSim bit-for-bit by construction
+                outputs = trace.execute()
+            n = cfg.harts if self.replicate_harts else 1
+            timing[scheme] = simulate(cfg, [trace.items] * n)
+        return BackendResult(self.name, outputs or {}, timing)

@@ -1,0 +1,101 @@
+"""Lowering: KviProgram (virtual registers) -> core Instr trace (SPM
+addresses), shared by the oracle and cycle-sim backends.
+
+Virtual registers become SPM allocations (bump allocator, SPM-line
+aligned, exactly like a programmer laying out the scratchpads); memory
+buffers become main-memory handles. Reduction instructions whose IR dst is
+a vreg view get the legacy ``rf_store`` annotation — the register-file
+result spilled to its architectural destination, modelled as one scalar
+store by the cycle simulator (see ``repro.core.programs``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Union
+
+import numpy as np
+
+from repro.configs.base import KlessydraConfig
+from repro.core.isa import Instr, Scalar
+from repro.core.spm import SpmSpace
+from repro.kvi.ir import (REDUCTION_OPS, KviInstr, KviOp, KviProgram,
+                          ScalarBlock)
+
+Item = Union[Instr, Scalar]
+
+
+@dataclass
+class LoweredTrace:
+    """One KviProgram bound to one machine configuration."""
+
+    program: KviProgram
+    config: KlessydraConfig
+    items: List[Item]
+    spm: SpmSpace
+    mem: Dict[int, np.ndarray]       # legacy handle -> buffer
+    vreg_addr: Dict[int, int]        # vreg id -> SPM byte address
+    out_handles: Dict[str, int]      # output name -> legacy mem handle
+
+    def execute(self) -> Dict[str, np.ndarray]:
+        """Run the trace functionally on the SPM/main-memory model and
+        collect the program's output buffers (bit-exact Mfu semantics)."""
+        from repro.core.programs import _run_items
+        _run_items(self.items, self.spm, self.mem)
+        return self.collect_outputs()
+
+    def collect_outputs(self) -> Dict[str, np.ndarray]:
+        out = {}
+        for m in self.program.outputs:
+            shape = self.program.mem_init[m.id].shape
+            out[m.name] = self.mem[m.id].reshape(shape).copy()
+        return out
+
+
+def lower(program: KviProgram, config: KlessydraConfig) -> LoweredTrace:
+    """Bind a program's vregs/buffers to one machine config and emit the
+    dynamic Instr/Scalar trace the simulator and Mfu consume."""
+    spm = SpmSpace(config)
+    vreg_addr = {r.id: spm.alloc(r.name, r.length, r.elem_bytes)
+                 for r in program.vregs}
+    # legacy memory handles are the MemRef ids (declaration order)
+    mem = {m.id: program.mem_init[m.id].copy() for m in program.mems}
+    out_handles = {m.name: m.id for m in program.outputs}
+
+    def vaddr(ref):
+        r = program.vreg_by_id(ref.id)
+        return vreg_addr[ref.id] + r.elem_bytes * ref.offset
+
+    items: List[Item] = []
+    for it in program.items:
+        if isinstance(it, ScalarBlock):
+            items.append(Scalar(it.count))
+            continue
+        assert isinstance(it, KviInstr)
+        op = it.op
+        if op is KviOp.KMEMLD:
+            items.append(Instr("kmemld", dst=vaddr(it.dst), src1=it.src1.id,
+                               length=it.length, elem_bytes=it.elem_bytes))
+        elif op is KviOp.KMEMSTR:
+            items.append(Instr("kmemstr", dst=it.dst.id,
+                               src1=vaddr(it.src1), length=it.length,
+                               elem_bytes=it.elem_bytes))
+        elif op in REDUCTION_OPS:
+            i = Instr(op.value,
+                      src1=vaddr(it.src1),
+                      src2=vaddr(it.src2) if it.src2 is not None else None,
+                      scalar=it.scalar, length=it.length,
+                      elem_bytes=it.elem_bytes)
+            # register-file result spilled to the dst view's SPM location
+            dreg = program.vreg_by_id(it.dst.id)
+            i.rf_store = (vreg_addr[it.dst.id], it.dst.offset,
+                          dreg.elem_bytes)
+            items.append(i)
+        else:
+            items.append(Instr(op.value, dst=vaddr(it.dst),
+                               src1=vaddr(it.src1),
+                               src2=vaddr(it.src2) if it.src2 is not None
+                               else None,
+                               scalar=it.scalar, length=it.length,
+                               elem_bytes=it.elem_bytes))
+    return LoweredTrace(program, config, items, spm, mem, vreg_addr,
+                        out_handles)

@@ -1,0 +1,32 @@
+"""OracleBackend — pure-numpy functional execution (repro.core.mfu).
+
+The reference semantics: int32 two's-complement fixed point, 64-bit
+intermediate products wrapped to the element width, exactly the paper's
+MFU datapath. No timing. Used as the ground truth for differential tests
+against the cycle-sim and Pallas backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import KlessydraConfig
+from repro.kvi.backend import BackendResult, register_backend
+from repro.kvi.ir import KviProgram
+from repro.kvi.lowering import lower
+
+# Functionally the SPM is just an address space: give the oracle a big one
+# so any program the other backends accept lowers here too.
+_ORACLE_CFG = KlessydraConfig("oracle", M=1, F=1, D=4, spm_kbytes=256)
+
+
+@register_backend("oracle")
+class OracleBackend:
+    """Functional reference executor (no timing model)."""
+
+    def __init__(self, config: Optional[KlessydraConfig] = None):
+        self.config = config or _ORACLE_CFG
+
+    def run(self, program: KviProgram) -> BackendResult:
+        trace = lower(program, self.config)
+        outputs = trace.execute()
+        return BackendResult(self.name, outputs)

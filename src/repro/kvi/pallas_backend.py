@@ -1,0 +1,308 @@
+"""PallasBackend — compiles KVI programs onto fused Pallas kernels.
+
+The Klessydra insight, translated to TPU: vector operands live in the SPM
+across a whole *sequence* of vector instructions. Here, maximal runs of
+element-wise instructions are compiled into a **single fused
+``pl.pallas_call``** (one VMEM-resident slot file, one HBM read per input
+window, one write per output window); reductions go through the Pallas
+kdotp/kvred kernels; ``kmemld``/``kmemstr``/``kvcp`` are data movement
+handled on the register file.
+
+``fused_elementwise_call`` is the public compile-and-run primitive for an
+element-wise slot program. It supersedes the untyped tuple protocol that
+used to live in ``repro.kernels.kvi_vops`` (kept there as a deprecation
+shim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, pick_block
+from repro.kvi.backend import BackendResult, register_backend
+from repro.kvi.ir import (ELEMWISE_OPS, KviInstr, KviOp, KviProgram,
+                          ScalarBlock, np_dtype)
+
+# one fused element-wise slot instruction: (op, dst, src1, src2|None, imm)
+SlotOp = Tuple[str, int, int, Optional[int], int]
+
+_UNSIGNED = {jnp.int8.dtype: jnp.uint8, jnp.int16.dtype: jnp.uint16,
+             jnp.int32.dtype: jnp.uint32}
+
+
+def apply_vop(op: str, a, b, imm: int):
+    """Element-wise KVI semantics shared by the fused kernel body and the
+    jnp oracle (wrap-around integer arithmetic like the Klessydra MFU)."""
+    if op == "kaddv":
+        return a + b
+    if op == "ksubv":
+        return a - b
+    if op == "kvmul":
+        return a * b
+    if op == "ksvaddsc":
+        return a + jnp.asarray(imm, a.dtype)
+    if op == "ksvmulsc":
+        return a * jnp.asarray(imm, a.dtype)
+    if op == "ksrlv":
+        u = _UNSIGNED.get(jnp.dtype(a.dtype), jnp.uint32)
+        ua = a.astype(u)
+        return (ua >> jnp.asarray(imm, u)).astype(a.dtype)
+    if op == "ksrav":
+        return a >> jnp.asarray(imm, a.dtype)
+    if op == "krelu":
+        return jnp.maximum(a, jnp.asarray(0, a.dtype))
+    if op == "kvslt":
+        return (a < b).astype(a.dtype)
+    if op == "ksvslt":
+        return (a < jnp.asarray(imm, a.dtype)).astype(a.dtype)
+    if op == "kvcp":
+        return a
+    raise ValueError(op)
+
+
+def _fused_kernel(*refs, program: Tuple[SlotOp, ...], in_slots, out_slots,
+                  n_slots: int):
+    in_refs = refs[:len(in_slots)]
+    out_refs = refs[len(in_slots):]
+    slots: List = [None] * n_slots
+    for r, s in zip(in_refs, in_slots):
+        slots[s] = r[...]
+    for op, dst, s1, s2, imm in program:
+        a = slots[s1]
+        b = slots[s2] if s2 is not None else None
+        slots[dst] = apply_vop(op, a, b, imm)
+    for r, s in zip(out_refs, out_slots):
+        r[...] = slots[s]
+
+
+def fused_elementwise_call(program: Sequence[SlotOp],
+                           inputs: Sequence[Tuple[int, jax.Array]],
+                           out_slots: Sequence[int],
+                           n_slots: Optional[int] = None,
+                           block: int = 1024,
+                           interpret: Optional[bool] = None,
+                           ) -> List[jax.Array]:
+    """Run an element-wise slot program as one fused ``pl.pallas_call``.
+
+    ``inputs`` preload (slot, vector) pairs; every entry of ``out_slots``
+    comes back as an array of the common vector length. All vectors share
+    one length and dtype (one SPM line width per program).
+    """
+    program = tuple(program)
+    for op, *_ in program:
+        if KviOp(op) not in ELEMWISE_OPS:
+            raise ValueError(f"{op} is not an element-wise KVI op")
+    if not inputs:
+        raise ValueError("fused program needs at least one input vector")
+    arrs = [jnp.ravel(x) for _, x in inputs]
+    n = arrs[0].size
+    dt = arrs[0].dtype
+    if any(x.size != n for x in arrs):
+        raise ValueError("input length mismatch in fused program")
+    if n_slots is None:
+        n_slots = 1 + max([s for s, _ in inputs] + [o[1] for o in program]
+                          + list(out_slots))
+    bl = pick_block(n, block, align=8)
+    assert n % bl == 0, (n, bl)
+    grid = n // bl
+
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel, program=program,
+                          in_slots=tuple(s for s, _ in inputs),
+                          out_slots=tuple(out_slots), n_slots=n_slots),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0)) for _ in arrs],
+        out_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))
+                   for _ in out_slots],
+        out_shape=[jax.ShapeDtypeStruct((grid, bl), dt) for _ in out_slots],
+        interpret=INTERPRET if interpret is None else interpret,
+    )(*[x.reshape(grid, bl) for x in arrs])
+    return [o.reshape(n) for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# Whole-program executor: walks a KviProgram, fusing element-wise runs.
+# ---------------------------------------------------------------------------
+
+# a slot key: one (vreg id, element offset, length) window
+_Key = Tuple[int, int, int]
+
+
+def _overlaps(a: _Key, b: _Key) -> bool:
+    return (a[0] == b[0] and a != b
+            and a[1] < b[1] + b[2] and b[1] < a[1] + a[2])
+
+
+class _Segment:
+    """A pending run of element-wise instructions being fused."""
+
+    def __init__(self, length: int, dtype):
+        self.length = length
+        self.dtype = dtype
+        self.ops: List[SlotOp] = []
+        self.slot_of: Dict[_Key, int] = {}
+        self.gathered: List[_Key] = []   # keys loaded from the regfile
+        self.written: List[_Key] = []    # keys to write back at flush
+
+    def n_slots(self) -> int:
+        return len(self.slot_of)
+
+
+@register_backend("pallas")
+class PallasBackend:
+    """Executes a KviProgram on fused Pallas kernels (TPU, or CPU with
+    ``interpret=True`` — the default off-TPU).
+
+    max_fused_ops / max_fused_inputs bound how much of the element-wise
+    subgraph one ``pallas_call`` swallows before flushing (VMEM slot-file
+    pressure)."""
+
+    def __init__(self, interpret: Optional[bool] = None, block: int = 1024,
+                 max_fused_ops: int = 64, max_fused_inputs: int = 24):
+        self.interpret = INTERPRET if interpret is None else interpret
+        self.block = block
+        self.max_fused_ops = max_fused_ops
+        self.max_fused_inputs = max_fused_inputs
+        self.fused_calls = 0             # observability: pallas_call count
+
+    # -- register-file helpers -------------------------------------------
+    def _slice(self, regfile, key: _Key):
+        rid, off, n = key
+        return jax.lax.slice(regfile[rid], (off,), (off + n,))
+
+    def _set(self, regfile, key: _Key, val):
+        rid, off, n = key
+        regfile[rid] = regfile[rid].at[off:off + n].set(
+            val.astype(regfile[rid].dtype))
+
+    # -- segment management ----------------------------------------------
+    def _flush(self, seg: Optional[_Segment], regfile):
+        if seg is None or not seg.ops:
+            return None
+        inputs = [(seg.slot_of[k], self._slice(regfile, k))
+                  for k in seg.gathered]
+        out_keys = seg.written
+        outs = fused_elementwise_call(
+            seg.ops, inputs, [seg.slot_of[k] for k in out_keys],
+            n_slots=seg.n_slots(), block=self.block,
+            interpret=self.interpret)
+        self.fused_calls += 1
+        for k, v in zip(out_keys, outs):
+            self._set(regfile, k, v)
+        return None
+
+    def _slot_for(self, seg: _Segment, key: _Key, is_dst: bool):
+        """Slot index for ``key``; None means the segment must be flushed
+        first (window overlaps pending writes, or slot file full)."""
+        if (key not in seg.written
+                and any(_overlaps(key, w) for w in seg.written)):
+            # reads: the gathered window went stale; writes: two
+            # overlapping written windows would flush back in first-write
+            # order — both hazards require draining the segment first
+            return None
+        if key in seg.slot_of:
+            return seg.slot_of[key]
+        if not is_dst and len(seg.gathered) >= self.max_fused_inputs:
+            return None
+        s = len(seg.slot_of)
+        seg.slot_of[key] = s
+        if not is_dst:
+            seg.gathered.append(key)
+        return s
+
+    # -- scalar reductions -------------------------------------------------
+    def _reduce(self, i: KviInstr, regfile):
+        from repro.kernels import kdotp as _kd
+        a = self._slice(regfile, (i.src1.id, i.src1.offset, i.length))
+        kw = dict(interpret=self.interpret)
+        if i.op is KviOp.KVRED:
+            r = _kd.kvred(a, **kw)
+        elif i.op is KviOp.KDOTP:
+            b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
+            r = _kd.kdotp(a, b, **kw)
+        elif i.op is KviOp.KDOTPPS:
+            b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
+            r = _kd.kdotpps(a, b, i.scalar, **kw)
+        elif i.op is KviOp.KSVADDRF:
+            r = _kd.kvred(a, **kw) + jnp.asarray(i.scalar, jnp.int32)
+        elif i.op is KviOp.KSVMULRF:
+            # sum(a * s) == s * sum(a)  (mod 2^32 wrap arithmetic)
+            r = _kd.kvred(a, **kw) * jnp.asarray(i.scalar, jnp.int32)
+        else:                            # pragma: no cover
+            raise ValueError(i.op)
+        self._set(regfile, (i.dst.id, i.dst.offset, 1),
+                  jnp.reshape(r, (1,)))
+
+    # -- main walk ---------------------------------------------------------
+    def run(self, program: KviProgram) -> BackendResult:
+        regfile = {r.id: jnp.zeros(r.length, np_dtype(r.elem_bytes))
+                   for r in program.vregs}
+        mem = {m.id: np.array(program.mem_init[m.id]).reshape(-1)
+               for m in program.mems}
+        seg: Optional[_Segment] = None
+
+        for it in program.items:
+            if isinstance(it, ScalarBlock):
+                continue                 # no timing model here
+            i: KviInstr = it
+            if i.op in ELEMWISE_OPS and i.op is not KviOp.KVCP:
+                dt = jnp.dtype(np_dtype(i.elem_bytes))
+                if (seg is not None and
+                        (seg.length != i.length or seg.dtype != dt
+                         or len(seg.ops) >= self.max_fused_ops)):
+                    seg = self._flush(seg, regfile)
+                while True:
+                    if seg is None:
+                        seg = _Segment(i.length, dt)
+                    slots = []
+                    ok = True
+                    for ref, is_dst in ((i.src1, False), (i.src2, False),
+                                        (i.dst, True)):
+                        if ref is None:
+                            slots.append(None)
+                            continue
+                        s = self._slot_for(
+                            seg, (ref.id, ref.offset, i.length), is_dst)
+                        if s is None:
+                            ok = False
+                            break
+                        slots.append(s)
+                    if ok:
+                        break
+                    seg = self._flush(seg, regfile)
+                s1, s2, d = slots
+                seg.ops.append((i.op.value, d, s1, s2, i.scalar))
+                dkey = (i.dst.id, i.dst.offset, i.length)
+                if dkey not in seg.written:
+                    seg.written.append(dkey)
+                continue
+
+            # everything else ends the pending element-wise run
+            seg = self._flush(seg, regfile)
+            if i.op is KviOp.KMEMLD:
+                arr = mem[i.src1.id]
+                # Mfu semantics: the whole buffer lands in the scratchpad
+                self._set(regfile, (i.dst.id, i.dst.offset, arr.size),
+                          jnp.asarray(arr, np_dtype(i.elem_bytes)))
+            elif i.op is KviOp.KMEMSTR:
+                v = self._slice(regfile,
+                                (i.src1.id, i.src1.offset, i.length))
+                mem[i.dst.id] = np.asarray(v)
+            elif i.op is KviOp.KVCP:
+                v = self._slice(regfile,
+                                (i.src1.id, i.src1.offset, i.length))
+                self._set(regfile, (i.dst.id, i.dst.offset, i.length), v)
+            else:
+                self._reduce(i, regfile)
+        self._flush(seg, regfile)
+
+        outputs = {}
+        for m in program.outputs:
+            shape = program.mem_init[m.id].shape
+            outputs[m.name] = np.asarray(mem[m.id]).reshape(shape).copy()
+        return BackendResult(self.name, outputs)

@@ -1,0 +1,247 @@
+"""The paper's three computation kernels, authored ONCE as KVI programs.
+
+Each builder returns a backend-neutral :class:`~repro.kvi.ir.KviProgram`;
+run it on any registered backend::
+
+    prog = conv2d_program(img, filt, shift=4)
+    get_backend("oracle").run(prog)      # numpy ground truth
+    get_backend("cyclesim").run(prog)    # values + per-scheme cycles
+    get_backend("pallas").run(prog)      # fused Pallas kernels
+
+Instruction traces (including the scalar-bookkeeping counts that feed the
+cycle model) match the legacy ``repro.core.programs`` builders item for
+item — the Table 2/3 reproductions are unchanged by the IR port.
+
+Kernels (paper §PERFORMANCE RESULTS): 2D convolution (3x3..11x11 filters,
+zero padding, fixed-point post-scaling), radix-2 DIF FFT-256 (Q15
+twiddles, contiguous-half butterflies, final bit-reversal), MatMul 64x64
+(row-vector accumulation resident / kdotp-streamed). 32-bit fixed point
+throughout, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.kvi.backend import BackendResult
+from repro.kvi.ir import KviProgram, KviProgramBuilder
+
+# ---------------------------------------------------------------------------
+# 2D convolution, FxF filter, zero padding, fixed-point post-scale
+# ---------------------------------------------------------------------------
+
+
+def conv2d_program(img: np.ndarray, filt: np.ndarray,
+                   shift: int = 0) -> KviProgram:
+    S = img.shape[0]
+    F = filt.shape[0]
+    pad = F // 2
+    Sp = S + 2 * pad
+    padded = np.zeros((Sp, Sp), np.int32)
+    padded[pad:pad + S, pad:pad + S] = img
+    b = KviProgramBuilder(f"conv{S}x{S}_f{F}")
+    hin = b.mem_in("img", padded)
+    rin = b.vreg("in", Sp * Sp)
+    acc = b.vreg("acc", S)
+    tmp = b.vreg("tmp", S)
+    b.scalar(40)                                  # kernel prologue
+    b.kmemld(rin, hin)
+    for i in range(S):
+        b.scalar(6)                               # row loop bookkeeping
+        first = True
+        for fr in range(F):
+            for fc in range(F):
+                w = int(filt[fr, fc])
+                src = rin.view((i + fr) * Sp + fc, S)
+                b.scalar(3)
+                if first:
+                    b.ksvmulsc(acc, src, scalar=w)
+                    first = False
+                else:
+                    b.ksvmulsc(tmp, src, scalar=w)
+                    b.kaddv(acc, acc, tmp)
+        if shift:
+            b.ksrav(acc, acc, scalar=shift)
+        hrow = b.mem_out(f"row{i}", S)
+        b.kmemstr(hrow, acc)
+    return b.build(alg_ops=2 * S * S * F * F, kind="conv2d", S=S, F=F,
+                   shift=shift)
+
+
+def conv2d_result(res: BackendResult, S: Optional[int] = None) -> np.ndarray:
+    rows = sorted(((k, v) for k, v in res.outputs.items()
+                   if k.startswith("row")),
+                  key=lambda kv: int(kv[0][3:]))
+    return np.stack([v for _, v in rows], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# MatMul. Two code paths, chosen by SPM capacity exactly as a programmer
+# would (paper: a 64x64 int32 B [16 KiB] does NOT fit the 3x4 KiB
+# scratchpads and must be streamed):
+#   * resident: B held in SPM, row-vector accumulation (ksvmulsc + kaddv)
+#   * streamed: A rows resident, B^T columns streamed per output element,
+#     kdotp per element (vector MAC through the multiplier + adder tree)
+# ---------------------------------------------------------------------------
+
+
+def matmul_program(A: np.ndarray, B: np.ndarray, shift: int = 0,
+                   resident: Optional[bool] = None,
+                   spm_bytes: Optional[int] = None) -> KviProgram:
+    n, m = A.shape
+    _, p = B.shape
+    if resident is None:
+        cap = spm_bytes if spm_bytes is not None else 4 * 4 * 1024
+        resident = m * p * 4 + (2 * p + n) * 4 <= cap
+    b = KviProgramBuilder(f"matmul{n}x{p}")
+
+    if resident:
+        hB = b.mem_in("B", B.astype(np.int32))
+        rB = b.vreg("B", m * p)
+        acc = b.vreg("acc", p)
+        tmp = b.vreg("tmp", p)
+        b.scalar(40)                              # kernel prologue
+        b.kmemld(rB, hB)
+        for i in range(n):
+            b.scalar(3)                           # row loop bookkeeping
+            for k in range(m):
+                b.scalar(2)                       # a-scalar load + addr bump
+                aik = int(A[i, k])
+                row = rB.view(p * k, p)
+                if k == 0:
+                    b.ksvmulsc(acc, row, scalar=aik)
+                else:
+                    b.ksvmulsc(tmp, row, scalar=aik)
+                    b.kaddv(acc, acc, tmp)
+            if shift:
+                b.ksrav(acc, acc, scalar=shift)
+            hrow = b.mem_out(f"row{i}", p)
+            b.kmemstr(hrow, acc)
+        return b.build(alg_ops=2 * n * m * p, kind="matmul", n=n, p=p,
+                       shift=shift, resident=True)
+
+    # streamed path: per output element, kdotp(A_row, B_col)
+    Bt = np.ascontiguousarray(B.astype(np.int32).T)
+    arow = b.vreg("arow", m)
+    bcol = b.vreg("bcol", m)
+    acc = b.vreg("acc", p)
+    b.scalar(40)                                  # kernel prologue
+    for i in range(n):
+        b.scalar(3)
+        hA = b.mem_in(f"arow{i}", A[i].astype(np.int32))
+        b.kmemld(arow, hA)
+        for j in range(p):
+            b.scalar(3)                           # col pointer, loop, store rd
+            hcol = b.mem_in(f"bcol{i}_{j}", Bt[j])
+            b.kmemld(bcol, hcol)
+            if shift:
+                b.kdotpps(acc[j], arow, bcol, shift)
+            else:
+                b.kdotp(acc[j], arow, bcol)
+            # register-file result written to acc[j]: one scalar store
+            b.scalar(1)
+        hrow = b.mem_out(f"row{i}", p)
+        b.kmemstr(hrow, acc)
+    return b.build(alg_ops=2 * n * m * p, kind="matmul", n=n, p=p,
+                   shift=shift, resident=False)
+
+
+def matmul_result(res: BackendResult, n: Optional[int] = None) -> np.ndarray:
+    return conv2d_result(res)
+
+
+# ---------------------------------------------------------------------------
+# FFT-256: radix-2 DIF, contiguous-half butterflies, Q15 twiddles,
+# final bit-reversal (element copies — deliberately DLP-unfriendly,
+# matching the paper's observation that FFT gains come from TLP).
+# ---------------------------------------------------------------------------
+
+Q = 15
+
+
+def _twiddles(m: int) -> tuple:
+    k = np.arange(m // 2)
+    w = np.exp(-2j * np.pi * k / m)
+    return ((w.real * (1 << Q)).astype(np.int32),
+            (w.imag * (1 << Q)).astype(np.int32))
+
+
+def fft_program(x_re: np.ndarray, x_im: np.ndarray) -> KviProgram:
+    n = len(x_re)
+    assert n & (n - 1) == 0
+    b = KviProgramBuilder(f"fft{n}")
+    hre = b.mem_in("x_re", x_re.astype(np.int32))
+    him = b.mem_in("x_im", x_im.astype(np.int32))
+    are = b.vreg("re", n)
+    aim = b.vreg("im", n)
+    t1 = b.vreg("t1", n // 2)
+    t2 = b.vreg("t2", n // 2)
+    dre = b.vreg("dre", n // 2)
+    dim = b.vreg("dim", n // 2)
+    # per-size twiddle vectors, loaded once
+    tw = {}
+    m = n
+    while m >= 2:
+        wre, wim = _twiddles(m)
+        rr = b.vreg(f"wre{m}", m // 2)
+        ri = b.vreg(f"wim{m}", m // 2)
+        b.kmemld(rr, b.mem_in(f"wre{m}", wre))
+        b.kmemld(ri, b.mem_in(f"wim{m}", wim))
+        tw[m] = (rr, ri)
+        m //= 2
+    b.scalar(40)                                  # kernel prologue
+    b.kmemld(are, hre)
+    b.kmemld(aim, him)
+
+    def butterfly(base: int, m: int):
+        """DIF butterfly on the contiguous block [base, base+m)."""
+        h = m // 2
+        lo_re, hi_re = are.view(base, h), are.view(base + h, h)
+        lo_im, hi_im = aim.view(base, h), aim.view(base + h, h)
+        wre, wim = tw[m]
+        th1, th2 = t1[:h], t2[:h]
+        vdre, vdim = dre[:h], dim[:h]
+        b.scalar(6)
+        # d = lo - hi (complex), top = lo + hi
+        b.ksubv(vdre, lo_re, hi_re)
+        b.ksubv(vdim, lo_im, hi_im)
+        b.kaddv(lo_re, lo_re, hi_re)
+        b.kaddv(lo_im, lo_im, hi_im)
+        # hi = d * w  (Q15)
+        b.kvmul(th1, vdre, wre)
+        b.ksrav(th1, th1, scalar=Q)
+        b.kvmul(th2, vdim, wim)
+        b.ksrav(th2, th2, scalar=Q)
+        b.ksubv(hi_re, th1, th2)
+        b.kvmul(th1, vdre, wim)
+        b.ksrav(th1, th1, scalar=Q)
+        b.kvmul(th2, vdim, wre)
+        b.ksrav(th2, th2, scalar=Q)
+        b.kaddv(hi_im, th1, th2)
+
+    m = n
+    while m >= 2:
+        for base in range(0, n, m):
+            butterfly(base, m)
+        m //= 2
+
+    # bit-reversal reorder via element copies (vector length 1)
+    nb = int(np.log2(n))
+    out_re = b.vreg("out_re", n)
+    out_im = b.vreg("out_im", n)
+    for i in range(n):
+        j = int(f"{i:0{nb}b}"[::-1], 2)
+        b.scalar(2)
+        b.kvcp(out_re[j], are[i])
+        b.kvcp(out_im[j], aim[i])
+    ore = b.mem_out("out_re", n)
+    oim = b.mem_out("out_im", n)
+    b.kmemstr(ore, out_re)
+    b.kmemstr(oim, out_im)
+    return b.build(alg_ops=10 * (n // 2) * nb, kind="fft", n=n)
+
+
+def fft_result(res: BackendResult) -> np.ndarray:
+    return (res.outputs["out_re"].astype(np.float64) +
+            1j * res.outputs["out_im"].astype(np.float64))

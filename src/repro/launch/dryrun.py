@@ -23,7 +23,7 @@ def _run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     import jax
     from repro.launch.compile import (build_cell, estimate_device_memory,
                                       estimate_hbm_traffic, lower_cell)
-    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
     from repro.launch.mesh import HW, make_production_mesh
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -44,7 +44,7 @@ def _run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     coll = acct["collective_bytes"]
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     print(f"[{arch} {shape_name}] memory_analysis: {mem}", flush=True)
     print(f"[{arch} {shape_name}] cost_analysis: "
           f"flops={cost.get('flops', 0):.3e} "

@@ -249,6 +249,15 @@ def _analyze_comp(comp_name: str, comps: Dict[str, Computation],
     return t
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a per-device list of dicts, newer ones a single dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze_hlo(hlo_text: str, top_collectives: int = 0) -> dict:
     comps = parse_module(hlo_text)
     if "__entry__" not in comps:

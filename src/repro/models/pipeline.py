@@ -85,9 +85,10 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
         return out.reshape(x_local.shape)
 
     pspec = jax.tree_util.tree_map(lambda _: PS(axis), stage_params)
-    fn = jax.shard_map(ranked, mesh=mesh,
-                       in_specs=(pspec, PS()), out_specs=PS(),
-                       check_vma=False)
+    from repro.compat import shard_map
+    fn = shard_map(ranked, mesh=mesh,
+                   in_specs=(pspec, PS()), out_specs=PS(),
+                   check_vma=False)
     return fn(stage_params, x)
 
 

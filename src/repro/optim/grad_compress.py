@@ -57,7 +57,8 @@ def cross_pod_mean(grads, errors, mesh, axis_name: str = "pod"):
         return jax.tree_util.tree_map(leaf_fn, g_tree, e_tree)
 
     spec = jax.tree_util.tree_map(lambda _: PS(), grads)
-    fn = jax.shard_map(sharded, mesh=mesh,
-                       in_specs=(spec, spec), out_specs=(spec, spec),
-                       check_vma=False)
+    from repro.compat import shard_map
+    fn = shard_map(sharded, mesh=mesh,
+                   in_specs=(spec, spec), out_specs=(spec, spec),
+                   check_vma=False)
     return fn(grads, errors)

@@ -4,6 +4,9 @@ from pathlib import Path
 
 # src layout import without install
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# shared test helpers (e.g. _hypothesis_compat) importable from any
+# test directory depth
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; multi-device dry-run tests spawn

@@ -5,7 +5,7 @@ import signal
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.runtime.fault_tolerance import (Heartbeats, PreemptionGuard,
                                            StragglerDetector, plan_remesh)

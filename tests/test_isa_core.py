@@ -2,7 +2,7 @@
 hypothesis property tests over random vectors/immediates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import KlessydraConfig
 from repro.core.isa import Instr, OPDEFS, Unit, lsu_cycles, mfu_cycles

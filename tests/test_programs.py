@@ -3,7 +3,7 @@
 paper-kernel implementations end to end)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import KlessydraConfig
 from repro.core.programs import (build_conv2d, build_fft, build_matmul,

@@ -2,7 +2,7 @@
 properties) + hypothesis robustness over random programs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import KlessydraConfig
 from repro.core.isa import Instr, Scalar
