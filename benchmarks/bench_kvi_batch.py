@@ -1,0 +1,113 @@
+"""Batched-execution benchmark: the perf trajectory for KviWorkload.
+
+Two measurements, emitted to ``BENCH_kvi_batch.json``:
+
+  * cyclesim — composite-workload cycles per coprocessor scheme (the
+    paper's conv32 / fft256 / matmul64 on harts 0/1/2), i.e. the numbers
+    the hart-aware batch path must keep reproducing.
+  * pallas — wall time for N homogeneous program instances dispatched
+    one ``run()`` at a time vs. one batched ``run_workload()`` (batch
+    grid dimension: one compile + one dispatch per fused segment for the
+    whole batch), with the ``pallas_call`` counts that explain the gap.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_kvi_batch [--out PATH]
+or through the harness:  python -m benchmarks.run --only kvi_batch
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _conv_instances(S: int, n_instances: int):
+    """N conv programs sharing ONE filter (weights are instruction
+    immediates, so batchable instances must share them — the DNN-inference
+    shape: one model, N inputs) over different images."""
+    from repro.kvi.programs import conv2d_program
+    rng = np.random.default_rng(0)
+    filt = rng.integers(-8, 8, (3, 3)).astype(np.int32)
+    return [conv2d_program(
+        rng.integers(-128, 128, (S, S)).astype(np.int32), filt, shift=4)
+        for _ in range(n_instances)]
+
+
+def _pallas_batch_case(S: int, n_instances: int, emit) -> dict:
+    from repro.kvi.pallas_backend import PallasBackend
+    from repro.kvi.workload import KviWorkload
+
+    kernel = f"conv{S}"
+    progs = _conv_instances(S, n_instances)
+
+    per = PallasBackend()
+    t0 = time.perf_counter()
+    per_results = [per.run(p) for p in progs]
+    per_s = time.perf_counter() - t0
+
+    bat = PallasBackend()
+    wl = KviWorkload.homogeneous(progs)
+    t0 = time.perf_counter()
+    bat_result = bat.run_workload(wl)
+    bat_s = time.perf_counter() - t0
+
+    for r_per, r_bat in zip(per_results, bat_result.entry_results):
+        for k in r_per.outputs:
+            assert np.array_equal(r_per.outputs[k], r_bat.outputs[k]), k
+
+    row = {
+        "kernel": kernel, "n_instances": n_instances,
+        "per_program_s": round(per_s, 4), "batched_s": round(bat_s, 4),
+        "speedup": round(per_s / max(bat_s, 1e-9), 2),
+        "per_program_pallas_calls": per.fused_calls + per.reduce_calls,
+        "batched_pallas_calls": bat.fused_calls + bat.reduce_calls,
+    }
+    emit(f"{kernel:10s} N={n_instances}: per-program {per_s:.3f}s "
+         f"({row['per_program_pallas_calls']} pallas_calls) vs batched "
+         f"{bat_s:.3f}s ({row['batched_pallas_calls']} pallas_calls) "
+         f"-> {row['speedup']:.2f}x")
+    return row
+
+
+def run(emit) -> dict:
+    from benchmarks.paper_data import make_config
+    from repro.core.workloads import composite_cycles
+
+    emit("# --- cyclesim: composite workload cycles per scheme ---")
+    cyclesim = {}
+    for scheme, D in [("SISD", 1), ("SymMIMD", 8), ("HetMIMD", 8)]:
+        r = composite_cycles(make_config(scheme, D))
+        key = f"{scheme}_D{D}"
+        cyclesim[key] = r
+        emit(f"{key:12s} conv32={r['conv32']:.0f} fft256={r['fft256']:.0f} "
+             f"matmul64={r['matmul64']:.0f} total={r['total_cycles']}")
+
+    emit("# --- pallas: batched vs per-program dispatch ---")
+    pallas = [
+        _pallas_batch_case(8, 8, emit),
+        _pallas_batch_case(16, 8, emit),
+    ]
+
+    out = {"cyclesim_composite": cyclesim, "pallas_batch": pallas,
+           "checks": {
+               "batched_fewer_dispatches": all(
+                   row["batched_pallas_calls"] < row["per_program_pallas_calls"]
+                   for row in pallas)}}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kvi_batch.json")
+    args = ap.parse_args(argv)
+    result = run(emit=print)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

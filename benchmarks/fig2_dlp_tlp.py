@@ -1,33 +1,49 @@
 """Figure 2 reproduction: DLP vs TLP cycle-count boost for 2D convolutions
 across matrix sizes (the paper's key plot: TLP dominates for small vectors,
 DLP grows with vector size, TLP+DLP always beats pure DLP).
+
+Runs on the workload API: ONE homogeneous KviWorkload per conv size,
+timed across all five scheme configurations in a single
+``CycleSimBackend.run_workload`` call (the conv programs are
+config-independent, so the workload is built once and lowered per scheme).
 """
 from __future__ import annotations
 
 from benchmarks.paper_data import make_config
-from repro.core.workloads import homogeneous_cycles
+from repro.core.workloads import homogeneous_workload
 
 SIZES = ("conv4", "conv8", "conv16", "conv32")
 
+CURVES = {
+    "DLP only (D=8)": ("SIMD", 8),
+    "TLP only (MIMD)": ("SymMIMD", 1),
+    "TLP+DLP (D=8)": ("SymMIMD", 8),
+    "Het TLP+DLP D=8": ("HetMIMD", 8),
+}
+
 
 def run(emit) -> dict:
-    base = {k: homogeneous_cycles(make_config("SISD", 1), k)["avg_cycles"]
-            for k in SIZES}
-    out = {"sisd": base}
+    from repro.kvi.cyclesim import CycleSimBackend
+
+    base_cfg = make_config("SISD", 1)
+    schemes = {"sisd": base_cfg}
+    schemes.update({label: make_config(s, D)
+                    for label, (s, D) in CURVES.items()})
+    backend = CycleSimBackend(schemes=schemes)
+
+    # one workload per conv size, all schemes timed in one run
+    avg = {}
+    for k in SIZES:
+        wl = homogeneous_workload(base_cfg, k)
+        res = backend.run_workload(wl, functional=False)
+        avg[k] = {label: res.timing[label].cycles / schemes[label].harts
+                  for label in schemes}
+
+    out = {"sisd": {k: avg[k]["sisd"] for k in SIZES}}
     emit("# --- Fig 2: speedup over SISD (rows: scheme, cols: conv size) ---")
     emit(f"{'scheme':16s} " + " ".join(f"{k:>8s}" for k in SIZES))
-    curves = {
-        "DLP only (D=8)": ("SIMD", 8),
-        "TLP only (MIMD)": ("SymMIMD", 1),
-        "TLP+DLP (D=8)": ("SymMIMD", 8),
-        "Het TLP+DLP D=8": ("HetMIMD", 8),
-    }
-    for label, (scheme, D) in curves.items():
-        cfg = make_config(scheme, D)
-        boosts = {}
-        for k in SIZES:
-            c = homogeneous_cycles(cfg, k)["avg_cycles"]
-            boosts[k] = base[k] / c
+    for label in CURVES:
+        boosts = {k: avg[k]["sisd"] / avg[k][label] for k in SIZES}
         out[label] = boosts
         emit(f"{label:16s} " + " ".join(f"{boosts[k]:8.2f}x" for k in SIZES))
 

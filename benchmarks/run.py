@@ -17,12 +17,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
-                         "roofline")
+                         "roofline,kvi_batch")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig2_dlp_tlp, fig3_exec_time, fig4_energy,
-                            kernel_micro, roofline_report, table2_cycles,
-                            table3_filters)
+    from benchmarks import (bench_kvi_batch, fig2_dlp_tlp, fig3_exec_time,
+                            fig4_energy, kernel_micro, roofline_report,
+                            table2_cycles, table3_filters)
     benches = {
         "table2": (table2_cycles,
                    lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
@@ -37,6 +37,9 @@ def main(argv=None) -> int:
         "kernels": (kernel_micro, lambda r: f"n_kernels={len(r)}"),
         "roofline": (roofline_report,
                      lambda r: f"cells={len(r['rows'])}"),
+        "kvi_batch": (bench_kvi_batch,
+                      lambda r: "batched_fewer_dispatches="
+                      f"{r['checks']['batched_fewer_dispatches']}"),
     }
     only = [s for s in args.only.split(",") if s]
     rows = []

@@ -1,5 +1,11 @@
 """Table 2 reproduction: cycle counts for every (scheme x D x kernel) cell,
 homogeneous + composite workloads, vs the paper's published values.
+
+Homogeneous cells run through ``homogeneous_cycles`` (a KviWorkload per
+cell through ``CycleSimBackend.run_workload``); the composite table
+builds ONE composite KviWorkload — conv32 / fft256 / matmul64 pinned to
+harts 0/1/2 — and times all six (scheme, D) cells in a single
+``run_workload`` call (the kernel programs are config-independent here).
 """
 from __future__ import annotations
 
@@ -9,8 +15,8 @@ from benchmarks.paper_data import (CLAIMS, TABLE2_BASELINES,
                                    TABLE2_COMPOSITE, TABLE2_HOMOGENEOUS,
                                    make_config)
 from repro.core.baselines import baseline_cycles
-from repro.core.workloads import BASELINE_ARGS, composite_cycles, \
-    homogeneous_cycles
+from repro.core.workloads import (BASELINE_ARGS, COMPOSITE_KERNELS,
+                                  composite_workload, homogeneous_cycles)
 
 KERNELS = ("conv4", "conv8", "conv16", "conv32", "fft256", "matmul64")
 
@@ -46,11 +52,21 @@ def run(emit) -> dict:
     emit("# (the paper's composite normalization is not fully specified; we")
     emit("#  report per-hart latency/instance and validate the SCHEME")
     emit("#  ORDERING + het-vs-sym closeness, which are the paper's claims)")
+    from repro.kvi.cyclesim import CycleSimBackend
+    comp_cells = [("SISD", 1), ("SIMD", 8), ("SymMIMD", 1),
+                  ("SymMIMD", 8), ("HetMIMD", 1), ("HetMIMD", 8)]
+    comp_cfgs = {cell: make_config(*cell) for cell in comp_cells}
+    reps = {"conv32": 6, "fft256": 6, "matmul64": 1}
+    wl = composite_workload(comp_cfgs[comp_cells[0]], reps)
+    comp_res = CycleSimBackend(
+        schemes={f"{s} D={D}": comp_cfgs[(s, D)] for s, D in comp_cells}
+    ).run_workload(wl, functional=False)
     sim_comp = {}
-    for (scheme, D) in [("SISD", 1), ("SIMD", 8), ("SymMIMD", 1),
-                        ("SymMIMD", 8), ("HetMIMD", 1), ("HetMIMD", 8)]:
-        cfg = make_config(scheme, D)
-        r = composite_cycles(cfg)
+    for (scheme, D) in comp_cells:
+        sim = comp_res.timing[f"{scheme} D={D}"]
+        r = {k: sim.per_hart[h].finish_cycle / reps[k]
+             for h, k in enumerate(COMPOSITE_KERNELS)}
+        r["total_cycles"] = sim.cycles
         sim_comp[(scheme, D)] = r
         p = TABLE2_COMPOSITE[(scheme, D)]
         emit(f"{scheme:8s} D={D}: " + " ".join(

@@ -1,9 +1,24 @@
-"""The paper's composite workload: conv + FFT + MatMul on three harts.
+"""The paper's composite workload: conv + FFT + MatMul on three harts,
+as a first-class :class:`~repro.kvi.workload.KviWorkload`.
 
-  1. Cycle-simulate the composite workload across coprocessor schemes
-     (reproduces the paper's observation that heterogeneous MIMD tracks
-     symmetric MIMD within a few percent at 1/3 the functional units).
-  2. Run the SAME composite as ONE het-MIMD Pallas kernel: grid slot =
+The hart-assignment model: a workload is a batch of (program,
+hart-assignment, data-instance) entries. Each entry either *pins* its
+program to a hart (``HartAssignment(h)``) — entries pinned to the same
+hart execute back-to-back in entry order, exactly the repeated-kernel
+streams of the paper's measurement protocol — or leaves the hart ``None``
+and is placed round-robin (or by the earliest-finish
+:class:`~repro.kvi.scheduler.HartScheduler`). Every backend executes the
+same workload object through ``run_workload()``:
+
+  1. cyclesim — per-hart traces with true inter-hart contention per
+     coprocessor scheme (reproduces the paper's observation that
+     heterogeneous MIMD tracks symmetric MIMD within a few percent at
+     1/3 the functional units).
+  2. oracle / pallas — the same entries, bit-identical outputs; the
+     Pallas backend groups entries by program structure and compiles
+     each group with a batch grid dimension (one ``pallas_call`` per
+     fused segment for a whole homogeneous group).
+  3. The SAME composite as ONE het-MIMD Pallas kernel: grid slot =
      hart, switched tile programs, dedicated VMEM blocks.
 
 Run:  PYTHONPATH=src python examples/composite_workload.py
@@ -12,21 +27,51 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.configs.base import KlessydraConfig
-from repro.core.workloads import composite_cycles
+from repro.core.workloads import COMPOSITE_KERNELS, composite_workload
 from repro.kernels import ref
 from repro.kernels.het_mimd import het_mimd_composite
+from repro.kvi import get_backend
+from repro.kvi.cyclesim import CycleSimBackend
 
 
 def simulate():
     print("=== composite workload: cycle simulation ===")
     print(f"{'scheme':18s} {'conv32':>9s} {'fft256':>9s} {'matmul64':>9s}")
-    for name, M, F, D in [("SISD", 1, 1, 1), ("SIMD D=8", 1, 1, 8),
-                          ("Sym MIMD D=8", 3, 3, 8),
-                          ("Het MIMD D=8", 3, 1, 8)]:
-        cfg = KlessydraConfig(name, M=M, F=F, D=D)
-        r = composite_cycles(cfg)
-        print(f"{name:18s} {r['conv32']:9.0f} {r['fft256']:9.0f} "
-              f"{r['matmul64']:9.0f}")
+    reps = {"conv32": 6, "fft256": 6, "matmul64": 1}
+    schemes = {name: KlessydraConfig(name, M=M, F=F, D=D)
+               for name, M, F, D in [("SISD", 1, 1, 1), ("SIMD D=8", 1, 1, 8),
+                                     ("Sym MIMD D=8", 3, 3, 8),
+                                     ("Het MIMD D=8", 3, 1, 8)]}
+    wl = composite_workload(next(iter(schemes.values())), reps)
+    print(f"  ({wl}: conv32 on hart 0, fft256 on hart 1, matmul64 on "
+          f"hart 2)")
+    res = CycleSimBackend(schemes=schemes).run_workload(wl,
+                                                        functional=False)
+    for name, sim in res.timing.items():
+        per_kernel = [sim.per_hart[h].finish_cycle / reps[k]
+                      for h, k in enumerate(COMPOSITE_KERNELS)]
+        print(f"{name:18s} " + " ".join(f"{c:9.0f}" for c in per_kernel))
+
+
+def cross_backend():
+    print("\n=== composite workload: one object, three backends ===")
+    # 64 KiB SPMs keep matmul64 on the SPM-resident path (the streamed
+    # path is 4096 kdotp launches — correct but slow in interpret mode)
+    cfg = KlessydraConfig("x", M=3, F=1, D=8, spm_kbytes=64)
+    wl = composite_workload(cfg, reps={"conv32": 1, "fft256": 1,
+                                       "matmul64": 1})
+    results = {name: get_backend(name).run_workload(wl)
+               for name in ("oracle", "cyclesim", "pallas")}
+    ok = all(
+        np.array_equal(results["oracle"].entry_results[i].outputs[k],
+                       res.entry_results[i].outputs[k])
+        for res in results.values()
+        for i in range(len(wl.entries))
+        for k in results["oracle"].entry_results[i].outputs)
+    print(f"  oracle == cyclesim == pallas across "
+          f"{len(wl.entries)} heterogeneous entries: {ok}")
+    c = results["cyclesim"].cycles
+    print(f"  cyclesim workload cycles: {c}")
 
 
 def pallas_composite():
@@ -52,4 +97,5 @@ def pallas_composite():
 
 if __name__ == "__main__":
     simulate()
+    cross_backend()
     pallas_composite()

@@ -24,6 +24,13 @@ def _lower_items(prog, cfg):
     return lower(prog, cfg).items
 
 
+def _cyclesim(cfg: KlessydraConfig):
+    """A CycleSimBackend timing exactly one scheme (lazy import: repro.kvi
+    imports repro.core.isa)."""
+    from repro.kvi.cyclesim import CycleSimBackend
+    return CycleSimBackend(schemes={"scheme": cfg})
+
+
 def _conv_prog(cfg, S=32, F=3, seed=0):
     from repro.kvi.programs import conv2d_program
     rng = np.random.default_rng(seed)
@@ -73,15 +80,51 @@ BASELINE_ARGS = {
 }
 
 
+def homogeneous_workload(cfg: KlessydraConfig, kernel: str,
+                         harts: Optional[int] = None):
+    """The paper's homogeneous protocol as a KviWorkload: `kernel` on
+    every hart, different data per hart (seed = hart index)."""
+    from repro.kvi.workload import (HartAssignment, KviWorkload,
+                                    WorkloadEntry)
+    n = harts if harts is not None else cfg.harts
+    entries = tuple(
+        WorkloadEntry(KERNEL_BUILDERS[kernel](cfg, seed=h),
+                      HartAssignment(h))
+        for h in range(n))
+    return KviWorkload(f"homogeneous_{kernel}", entries,
+                       meta={"kernel": kernel})
+
+
+COMPOSITE_KERNELS = ("conv32", "fft256", "matmul64")
+
+
+def composite_workload(cfg: KlessydraConfig,
+                       reps: Optional[Dict[str, int]] = None,
+                       kernels=COMPOSITE_KERNELS):
+    """The paper's composite protocol as a KviWorkload: conv32 / fft256 /
+    matmul64 pinned to harts 0/1/2, each repeated ``reps[kernel]`` times
+    back-to-back on fresh data (seed = 100*hart + rep). Kernels missing
+    from ``reps`` run once."""
+    from repro.kvi.workload import KviWorkload
+    reps = reps or {"conv32": 6, "fft256": 6, "matmul64": 1}
+    by_hart = {
+        h: [KERNEL_BUILDERS[kern](cfg, seed=100 * h + r)
+            for r in range(reps.get(kern, 1))]
+        for h, kern in enumerate(kernels)}
+    wl = KviWorkload.composite(by_hart, name="composite")
+    wl.meta.update(kernels=tuple(kernels), reps=dict(reps))
+    return wl
+
+
 def homogeneous_cycles(cfg: KlessydraConfig, kernel: str) -> dict:
     """All harts run `kernel` on different data; avg cycles per kernel.
-    KERNEL_BUILDERS produce backend-neutral KviPrograms; timing binds them
-    to ``cfg`` via repro.kvi.lowering."""
-    progs = [_lower_items(KERNEL_BUILDERS[kernel](cfg, seed=h), cfg)
-             for h in range(cfg.harts)]
-    res = simulate(cfg, progs)
-    return {"avg_cycles": res.cycles / cfg.harts, "total_cycles": res.cycles,
-            "mfu_util": res.mfu_utilization}
+    KERNEL_BUILDERS produce backend-neutral KviPrograms; the workload runs
+    through ``CycleSimBackend.run_workload`` bound to ``cfg``."""
+    res = _cyclesim(cfg).run_workload(homogeneous_workload(cfg, kernel),
+                                      functional=False)
+    sim = res.timing["scheme"]
+    return {"avg_cycles": sim.cycles / cfg.harts, "total_cycles": sim.cycles,
+            "mfu_util": sim.mfu_utilization}
 
 
 def composite_cycles(cfg: KlessydraConfig, reps: Optional[Dict[str, int]] = None
@@ -89,19 +132,13 @@ def composite_cycles(cfg: KlessydraConfig, reps: Optional[Dict[str, int]] = None
     """conv32 / fft256 / matmul64 on harts 0/1/2 repeatedly; per-kernel
     average = hart finish time / instances (the matmul hart dominates)."""
     reps = reps or {"conv32": 6, "fft256": 6, "matmul64": 1}
-    progs = []
-    for h, kern in enumerate(("conv32", "fft256", "matmul64")):
-        items = []
-        for r in range(reps[kern]):
-            items.extend(
-                _lower_items(KERNEL_BUILDERS[kern](cfg, seed=100 * h + r),
-                             cfg))
-        progs.append(items)
-    res = simulate(cfg, progs)
+    res = _cyclesim(cfg).run_workload(composite_workload(cfg, reps),
+                                      functional=False)
+    sim = res.timing["scheme"]
     out = {}
-    for h, kern in enumerate(("conv32", "fft256", "matmul64")):
-        out[kern] = res.per_hart[h].finish_cycle / reps[kern]
-    out["total_cycles"] = res.cycles
+    for h, kern in enumerate(COMPOSITE_KERNELS):
+        out[kern] = sim.per_hart[h].finish_cycle / reps[kern]
+    out["total_cycles"] = sim.cycles
     return out
 
 

@@ -11,19 +11,31 @@ cyclesim   event-driven simulator, 3 coprocessor schemes        SimResult
 pallas     fused pl.pallas_call kernels (TPU / interpret)       no
 ========== ==================================================== =========
 
+Batched & composite execution: bundle programs into a
+:class:`KviWorkload` — N data instances of one kernel (homogeneous) or
+different kernels pinned to different harts (composite, the paper's
+conv/FFT/matmul protocol) — and execute it with
+``backend.run_workload(workload)``. :class:`~repro.kvi.scheduler.
+HartScheduler` packs a queue of programs onto free harts continuously.
+
 See ``repro.kvi.programs`` for the paper's conv2d / FFT-256 / matmul
 kernels on this API, and README.md for the full protocol description.
 """
-from repro.kvi.backend import (Backend, BackendResult, available_backends,
-                               get_backend, register_backend)
+from repro.kvi.backend import (Backend, BackendBase, BackendResult,
+                               available_backends, get_backend,
+                               register_backend)
 from repro.kvi.ir import (ELEMWISE_OPS, MEM_OPS, REDUCTION_OPS, KviInstr,
                           KviOp, KviProgram, KviProgramBuilder, MemRef,
                           Ref, ScalarBlock, VReg, View)
 from repro.kvi.lowering import LoweredTrace, lower
+from repro.kvi.workload import (HartAssignment, KviWorkload, WorkloadEntry,
+                                WorkloadResult, structural_signature)
 
 __all__ = [
-    "Backend", "BackendResult", "available_backends", "get_backend",
-    "register_backend", "KviInstr", "KviOp", "KviProgram",
+    "Backend", "BackendBase", "BackendResult", "available_backends",
+    "get_backend", "register_backend", "KviInstr", "KviOp", "KviProgram",
     "KviProgramBuilder", "MemRef", "Ref", "ScalarBlock", "VReg", "View",
     "ELEMWISE_OPS", "MEM_OPS", "REDUCTION_OPS", "LoweredTrace", "lower",
+    "HartAssignment", "KviWorkload", "WorkloadEntry", "WorkloadResult",
+    "structural_signature",
 ]

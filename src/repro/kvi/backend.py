@@ -1,15 +1,22 @@
 """The pluggable execution-backend protocol for KVI programs.
 
-A :class:`Backend` takes one :class:`~repro.kvi.ir.KviProgram` and returns
-a :class:`BackendResult` — output buffers by name, plus (for timing-aware
-backends) per-scheme :class:`~repro.core.simulator.SimResult` objects.
+The unit of execution is a :class:`~repro.kvi.workload.KviWorkload` — a
+batch of (program, hart-assignment, data-instance) entries executed by
+``run_workload()``, which returns a
+:class:`~repro.kvi.workload.WorkloadResult` (per-entry output buffers,
+plus workload-level per-scheme timing for timing-aware backends).
+
+The single-program ``run()`` remains as a thin wrapper: it wraps the
+program into a one-entry workload (:class:`BackendBase`) and unwraps the
+first entry's :class:`BackendResult`.
 
 Backends self-register under a short name::
 
     @register_backend("oracle")
-    class OracleBackend: ...
+    class OracleBackend(BackendBase): ...
 
-    get_backend("oracle").run(program)
+    get_backend("oracle").run(program)              # one program
+    get_backend("oracle").run_workload(workload)    # a composite batch
 
 ``available_backends()`` lists what is importable in this environment (the
 Pallas backend needs jax; the registry degrades gracefully without it).
@@ -17,11 +24,15 @@ Pallas backend needs jax; the registry degrades gracefully without it).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+from typing import (TYPE_CHECKING, Callable, Dict, Optional, Protocol,
+                    runtime_checkable)
 
 import numpy as np
 
 from repro.kvi.ir import KviProgram
+
+if TYPE_CHECKING:                      # pragma: no cover - typing only
+    from repro.kvi.workload import KviWorkload, WorkloadResult
 
 
 @dataclass
@@ -48,12 +59,25 @@ class BackendResult:
 
 @runtime_checkable
 class Backend(Protocol):
-    """Anything that can execute a KviProgram."""
+    """Anything that can execute KVI work. ``run_workload`` is the
+    primary protocol method; ``run`` is the single-program convenience."""
 
     name: str
 
     def run(self, program: KviProgram) -> BackendResult:
         ...
+
+    def run_workload(self, workload: "KviWorkload") -> "WorkloadResult":
+        ...
+
+
+class BackendBase:
+    """Shared backend behavior: the legacy single-program ``run()`` is a
+    thin wrapper over ``run_workload()`` on a one-entry workload."""
+
+    def run(self, program: KviProgram) -> BackendResult:
+        from repro.kvi.workload import KviWorkload
+        return self.run_workload(KviWorkload.single(program)).entry_result(0)
 
 
 _REGISTRY: Dict[str, Callable[..., Backend]] = {}

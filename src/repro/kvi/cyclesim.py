@@ -1,15 +1,23 @@
 """CycleSimBackend — functional values + cycle timing for the paper's
 three coprocessor schemes (repro.core.simulator).
 
-One ``run()`` returns both:
-  * outputs  — bit-identical to the oracle backend (same Mfu execution of
-               the same lowered trace), and
-  * timing   — scheme name -> SimResult for shared (M=1,F=1),
-               symmetric MIMD (M=3,F=3) and heterogeneous MIMD (M=3,F=1),
-               each with the program replicated on all harts (the paper's
-               homogeneous-workload protocol).
+The unit of execution is a :class:`~repro.kvi.workload.KviWorkload`:
+entries lower to per-hart Instr/Scalar traces (entries pinned to the same
+hart run back-to-back in entry order), so the paper's composite protocol —
+conv on hart 0, FFT on hart 1, matmul on hart 2 — runs natively through
+the IR. ``run_workload()`` returns both:
 
-Paper invariant (validated in tests):
+  * per-entry outputs — bit-identical to the oracle backend (same Mfu
+                        execution of the same lowered trace), and
+  * timing           — scheme name -> SimResult for shared (M=1,F=1),
+                       symmetric MIMD (M=3,F=3) and heterogeneous MIMD
+                       (M=3,F=1), for the WHOLE workload with inter-hart
+                       contention.
+
+The single-program ``run()`` keeps the paper's homogeneous protocol: the
+program is replicated on all harts (``replicate_harts=True``).
+
+Paper invariant (validated in tests, homogeneous AND composite):
     sym-MIMD cycles <= het-MIMD cycles <= shared cycles.
 """
 from __future__ import annotations
@@ -18,9 +26,11 @@ from typing import Dict, Optional
 
 from repro.configs.base import KlessydraConfig
 from repro.core.simulator import SimResult, simulate
-from repro.kvi.backend import BackendResult, register_backend
+from repro.kvi.backend import (BackendBase, BackendResult, register_backend)
 from repro.kvi.ir import KviProgram
 from repro.kvi.lowering import lower
+from repro.kvi.workload import (KviWorkload, WorkloadResult,
+                                dedup_entry_outputs)
 
 
 def default_schemes(D: int = 4, spm_kbytes: int = 64,
@@ -37,7 +47,7 @@ def default_schemes(D: int = 4, spm_kbytes: int = 64,
 
 
 @register_backend("cyclesim")
-class CycleSimBackend:
+class CycleSimBackend(BackendBase):
     """Values + per-scheme cycle counts from the event-driven simulator."""
 
     def __init__(self,
@@ -47,14 +57,47 @@ class CycleSimBackend:
         self.replicate_harts = replicate_harts
 
     def run(self, program: KviProgram) -> BackendResult:
+        """Single-program protocol: replicate on all harts (the paper's
+        homogeneous measurement) unless ``replicate_harts=False``. With
+        schemes of unequal hart counts the SMALLEST count is replicated,
+        so every scheme times the same workload (the paper's schemes all
+        have 3 harts, where this is exactly the legacy per-scheme
+        replication)."""
+        if self.replicate_harts:
+            n = min(cfg.harts for cfg in self.schemes.values())
+            wl = KviWorkload.replicate(program, n)
+        else:
+            wl = KviWorkload.single(program)
+        return self.run_workload(wl).entry_result(0)
+
+    def run_workload(self, workload: KviWorkload,
+                     functional: bool = True) -> WorkloadResult:
+        """Timing for the whole workload per scheme, plus (with
+        ``functional=True``) per-entry outputs. Timing-only callers (the
+        Table-2 sweeps) pass ``functional=False`` to skip the Mfu replay."""
         timing: Dict[str, SimResult] = {}
-        outputs = None
+        entry_outputs = None if functional else \
+            [{} for _ in workload.entries]
         for scheme, cfg in self.schemes.items():
-            trace = lower(program, cfg)
-            if outputs is None:
-                # functional values: same trace + Mfu path as the oracle,
+            # lower each distinct program once per scheme (entries often
+            # share program objects, e.g. the replicated protocol)
+            traces = {}
+            for e in workload.entries:
+                if id(e.program) not in traces:
+                    traces[id(e.program)] = lower(e.program, cfg)
+            if entry_outputs is None:
+                # functional values: same trace + Mfu path as the oracle
+                # (shared dedup/copy semantics in dedup_entry_outputs),
                 # so Oracle == CycleSim bit-for-bit by construction
-                outputs = trace.execute()
-            n = cfg.harts if self.replicate_harts else 1
-            timing[scheme] = simulate(cfg, [trace.items] * n)
-        return BackendResult(self.name, outputs or {}, timing)
+                entry_outputs = dedup_entry_outputs(
+                    workload.entries,
+                    lambda p: traces[id(p)].execute())
+            per_hart = workload.assign_harts(cfg.harts)
+            progs = [
+                [it for i in idxs
+                 for it in traces[id(workload.entries[i].program)].items]
+                for hart, idxs in enumerate(per_hart)]
+            timing[scheme] = simulate(cfg, progs)
+        results = tuple(BackendResult(self.name, out)
+                        for out in entry_outputs)
+        return WorkloadResult(self.name, workload, results, timing)

@@ -10,8 +10,9 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.configs.base import KlessydraConfig
-from repro.kvi.backend import BackendResult, register_backend
-from repro.kvi.ir import KviProgram
+from repro.kvi.backend import BackendBase, BackendResult, register_backend
+from repro.kvi.workload import (KviWorkload, WorkloadResult,
+                                dedup_entry_outputs)
 from repro.kvi.lowering import lower
 
 # Functionally the SPM is just an address space: give the oracle a big one
@@ -20,13 +21,17 @@ _ORACLE_CFG = KlessydraConfig("oracle", M=1, F=1, D=4, spm_kbytes=256)
 
 
 @register_backend("oracle")
-class OracleBackend:
-    """Functional reference executor (no timing model)."""
+class OracleBackend(BackendBase):
+    """Functional reference executor (no timing model). Workloads execute
+    entry-by-entry — hart assignments do not change functional values."""
 
     def __init__(self, config: Optional[KlessydraConfig] = None):
         self.config = config or _ORACLE_CFG
 
-    def run(self, program: KviProgram) -> BackendResult:
-        trace = lower(program, self.config)
-        outputs = trace.execute()
-        return BackendResult(self.name, outputs)
+    def run_workload(self, workload: KviWorkload) -> WorkloadResult:
+        outs = dedup_entry_outputs(
+            workload.entries,
+            lambda p: lower(p, self.config).execute())
+        return WorkloadResult(
+            self.name, workload,
+            tuple(BackendResult(self.name, out) for out in outs))

@@ -8,6 +8,14 @@ window, one write per output window); reductions go through the Pallas
 kdotp/kvred kernels; ``kmemld``/``kmemstr``/``kvcp`` are data movement
 handled on the register file.
 
+Workload batching: a homogeneous :class:`~repro.kvi.workload.KviWorkload`
+(N data instances of one program structure) executes with a **batch grid
+dimension** — every fused segment is ONE ``pallas_call`` over an
+``(N, grid)`` grid and every reduction is one vmapped kernel launch, so N
+instances cost one compile and one dispatch per segment instead of N.
+Heterogeneous workloads are grouped by program structure and each group is
+batched the same way.
+
 ``fused_elementwise_call`` is the public compile-and-run primitive for an
 element-wise slot program. It supersedes the untyped tuple protocol that
 used to live in ``repro.kernels.kvi_vops`` (kept there as a deprecation
@@ -24,9 +32,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import INTERPRET, pick_block
-from repro.kvi.backend import BackendResult, register_backend
+from repro.kvi.backend import (BackendBase, BackendResult, register_backend)
 from repro.kvi.ir import (ELEMWISE_OPS, KviInstr, KviOp, KviProgram,
                           ScalarBlock, np_dtype)
+from repro.kvi.workload import (KviWorkload, WorkloadResult,
+                                structural_signature)
 
 # one fused element-wise slot instruction: (op, dst, src1, src2|None, imm)
 SlotOp = Tuple[str, int, int, Optional[int], int]
@@ -86,12 +96,17 @@ def fused_elementwise_call(program: Sequence[SlotOp],
                            n_slots: Optional[int] = None,
                            block: int = 1024,
                            interpret: Optional[bool] = None,
+                           batched: bool = False,
                            ) -> List[jax.Array]:
     """Run an element-wise slot program as one fused ``pl.pallas_call``.
 
     ``inputs`` preload (slot, vector) pairs; every entry of ``out_slots``
     comes back as an array of the common vector length. All vectors share
     one length and dtype (one SPM line width per program).
+
+    With ``batched=True`` every input is ``(N, n)`` — N program instances
+    — and the call runs over an ``(N, n // block)`` grid: one compile and
+    ONE dispatch for the whole batch. Outputs come back ``(N, n)``.
     """
     program = tuple(program)
     for op, *_ in program:
@@ -99,34 +114,57 @@ def fused_elementwise_call(program: Sequence[SlotOp],
             raise ValueError(f"{op} is not an element-wise KVI op")
     if not inputs:
         raise ValueError("fused program needs at least one input vector")
-    arrs = [jnp.ravel(x) for _, x in inputs]
-    n = arrs[0].size
-    dt = arrs[0].dtype
-    if any(x.size != n for x in arrs):
-        raise ValueError("input length mismatch in fused program")
     if n_slots is None:
         n_slots = 1 + max([s for s, _ in inputs] + [o[1] for o in program]
                           + list(out_slots))
+    if batched:
+        arrs = [x.reshape(x.shape[0], -1) for _, x in inputs]
+        N = arrs[0].shape[0]
+    else:
+        arrs = [jnp.ravel(x) for _, x in inputs]
+        N = None
+    n = arrs[0].shape[-1]
+    dt = arrs[0].dtype
+    if any(x.shape[-1] != n for x in arrs):
+        raise ValueError("input length mismatch in fused program")
     bl = pick_block(n, block, align=8)
     assert n % bl == 0, (n, bl)
     grid = n // bl
 
+    kernel = functools.partial(
+        _fused_kernel, program=program,
+        in_slots=tuple(s for s, _ in inputs),
+        out_slots=tuple(out_slots), n_slots=n_slots)
+    interp = INTERPRET if interpret is None else interpret
+    if batched:
+        outs = pl.pallas_call(
+            kernel,
+            grid=(N, grid),
+            in_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
+                      for _ in arrs],
+            out_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
+                       for _ in out_slots],
+            out_shape=[jax.ShapeDtypeStruct((N, grid, bl), dt)
+                       for _ in out_slots],
+            interpret=interp,
+        )(*[x.reshape(N, grid, bl) for x in arrs])
+        return [o.reshape(N, n) for o in outs]
     outs = pl.pallas_call(
-        functools.partial(_fused_kernel, program=program,
-                          in_slots=tuple(s for s, _ in inputs),
-                          out_slots=tuple(out_slots), n_slots=n_slots),
+        kernel,
         grid=(grid,),
         in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0)) for _ in arrs],
         out_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))
                    for _ in out_slots],
         out_shape=[jax.ShapeDtypeStruct((grid, bl), dt) for _ in out_slots],
-        interpret=INTERPRET if interpret is None else interpret,
+        interpret=interp,
     )(*[x.reshape(grid, bl) for x in arrs])
     return [o.reshape(n) for o in outs]
 
 
 # ---------------------------------------------------------------------------
 # Whole-program executor: walks a KviProgram, fusing element-wise runs.
+# The walk is batched: the register file and main memory carry a leading
+# batch dimension of N program instances sharing one structure.
 # ---------------------------------------------------------------------------
 
 # a slot key: one (vreg id, element offset, length) window
@@ -154,13 +192,14 @@ class _Segment:
 
 
 @register_backend("pallas")
-class PallasBackend:
-    """Executes a KviProgram on fused Pallas kernels (TPU, or CPU with
+class PallasBackend(BackendBase):
+    """Executes KVI workloads on fused Pallas kernels (TPU, or CPU with
     ``interpret=True`` — the default off-TPU).
 
     max_fused_ops / max_fused_inputs bound how much of the element-wise
     subgraph one ``pallas_call`` swallows before flushing (VMEM slot-file
-    pressure)."""
+    pressure). ``fused_calls`` counts issued ``pallas_call``s — a batch of
+    N homogeneous instances issues the same number as a single instance."""
 
     def __init__(self, interpret: Optional[bool] = None, block: int = 1024,
                  max_fused_ops: int = 64, max_fused_inputs: int = 24):
@@ -169,15 +208,18 @@ class PallasBackend:
         self.max_fused_ops = max_fused_ops
         self.max_fused_inputs = max_fused_inputs
         self.fused_calls = 0             # observability: pallas_call count
+        self.reduce_calls = 0           # vmapped reduction kernel launches
 
     # -- register-file helpers -------------------------------------------
+    # regfile[rid] is (N, length): N batched program instances.
     def _slice(self, regfile, key: _Key):
         rid, off, n = key
-        return jax.lax.slice(regfile[rid], (off,), (off + n,))
+        r = regfile[rid]
+        return jax.lax.slice(r, (0, off), (r.shape[0], off + n))
 
     def _set(self, regfile, key: _Key, val):
         rid, off, n = key
-        regfile[rid] = regfile[rid].at[off:off + n].set(
+        regfile[rid] = regfile[rid].at[:, off:off + n].set(
             val.astype(regfile[rid].dtype))
 
     # -- segment management ----------------------------------------------
@@ -190,7 +232,7 @@ class PallasBackend:
         outs = fused_elementwise_call(
             seg.ops, inputs, [seg.slot_of[k] for k in out_keys],
             n_slots=seg.n_slots(), block=self.block,
-            interpret=self.interpret)
+            interpret=self.interpret, batched=True)
         self.fused_calls += 1
         for k, v in zip(out_keys, outs):
             self._set(regfile, k, v)
@@ -217,36 +259,52 @@ class PallasBackend:
 
     # -- scalar reductions -------------------------------------------------
     def _reduce(self, i: KviInstr, regfile):
+        """One vmapped reduction kernel over the whole batch: the batch
+        dimension becomes a vmap axis over the Pallas kdotp/kvred kernels
+        (one launch for N instances)."""
         from repro.kernels import kdotp as _kd
         a = self._slice(regfile, (i.src1.id, i.src1.offset, i.length))
-        kw = dict(interpret=self.interpret)
+        interp = self.interpret
         if i.op is KviOp.KVRED:
-            r = _kd.kvred(a, **kw)
+            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a)
         elif i.op is KviOp.KDOTP:
             b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
-            r = _kd.kdotp(a, b, **kw)
+            r = jax.vmap(lambda x, y: _kd.kdotp(x, y, interpret=interp)
+                         )(a, b)
         elif i.op is KviOp.KDOTPPS:
             b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
-            r = _kd.kdotpps(a, b, i.scalar, **kw)
+            sh = i.scalar
+            r = jax.vmap(lambda x, y: _kd.kdotpps(x, y, sh,
+                                                  interpret=interp))(a, b)
         elif i.op is KviOp.KSVADDRF:
-            r = _kd.kvred(a, **kw) + jnp.asarray(i.scalar, jnp.int32)
+            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a) \
+                + jnp.asarray(i.scalar, jnp.int32)
         elif i.op is KviOp.KSVMULRF:
             # sum(a * s) == s * sum(a)  (mod 2^32 wrap arithmetic)
-            r = _kd.kvred(a, **kw) * jnp.asarray(i.scalar, jnp.int32)
+            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a) \
+                * jnp.asarray(i.scalar, jnp.int32)
         else:                            # pragma: no cover
             raise ValueError(i.op)
+        self.reduce_calls += 1
         self._set(regfile, (i.dst.id, i.dst.offset, 1),
-                  jnp.reshape(r, (1,)))
+                  jnp.reshape(r, (r.shape[0], 1)))
 
-    # -- main walk ---------------------------------------------------------
-    def run(self, program: KviProgram) -> BackendResult:
-        regfile = {r.id: jnp.zeros(r.length, np_dtype(r.elem_bytes))
-                   for r in program.vregs}
-        mem = {m.id: np.array(program.mem_init[m.id]).reshape(-1)
-               for m in program.mems}
+    # -- batched walk ------------------------------------------------------
+    def _run_batch(self, programs: Sequence[KviProgram]
+                   ) -> List[Dict[str, np.ndarray]]:
+        """Execute N structurally identical programs (different data) in
+        one batched walk: every fused segment is one ``pallas_call`` over
+        a batch grid, every reduction one vmapped kernel."""
+        proto = programs[0]
+        N = len(programs)
+        regfile = {r.id: jnp.zeros((N, r.length), np_dtype(r.elem_bytes))
+                   for r in proto.vregs}
+        mem = {m.id: np.stack([np.asarray(p.mem_init[m.id]).reshape(-1)
+                               for p in programs])
+               for m in proto.mems}
         seg: Optional[_Segment] = None
 
-        for it in program.items:
+        for it in proto.items:
             if isinstance(it, ScalarBlock):
                 continue                 # no timing model here
             i: KviInstr = it
@@ -287,7 +345,7 @@ class PallasBackend:
             if i.op is KviOp.KMEMLD:
                 arr = mem[i.src1.id]
                 # Mfu semantics: the whole buffer lands in the scratchpad
-                self._set(regfile, (i.dst.id, i.dst.offset, arr.size),
+                self._set(regfile, (i.dst.id, i.dst.offset, arr.shape[1]),
                           jnp.asarray(arr, np_dtype(i.elem_bytes)))
             elif i.op is KviOp.KMEMSTR:
                 v = self._slice(regfile,
@@ -301,8 +359,36 @@ class PallasBackend:
                 self._reduce(i, regfile)
         self._flush(seg, regfile)
 
-        outputs = {}
-        for m in program.outputs:
-            shape = program.mem_init[m.id].shape
-            outputs[m.name] = np.asarray(mem[m.id]).reshape(shape).copy()
-        return BackendResult(self.name, outputs)
+        results = []
+        for b in range(N):
+            outputs = {}
+            for m in programs[b].outputs:
+                shape = programs[b].mem_init[m.id].shape
+                outputs[m.name] = np.asarray(mem[m.id][b]
+                                             ).reshape(shape).copy()
+            results.append(outputs)
+        return results
+
+    def run_workload(self, workload: KviWorkload) -> WorkloadResult:
+        """Group entries by program structure; each group runs as one
+        batched walk (one compile + one dispatch per fused segment for the
+        whole group). Hart assignments carry no timing meaning here — on
+        TPU the batch grid IS the hart-level parallelism."""
+        calls_before = self.fused_calls + self.reduce_calls
+        groups: Dict[tuple, List[int]] = {}
+        for idx, e in enumerate(workload.entries):
+            groups.setdefault(structural_signature(e.program),
+                              []).append(idx)
+        entry_outputs: List[Optional[Dict[str, np.ndarray]]] = \
+            [None] * len(workload.entries)
+        for idxs in groups.values():
+            outs = self._run_batch(
+                [workload.entries[i].program for i in idxs])
+            for i, out in zip(idxs, outs):
+                entry_outputs[i] = out
+        results = tuple(BackendResult(self.name, out)
+                        for out in entry_outputs)
+        calls = self.fused_calls + self.reduce_calls - calls_before
+        return WorkloadResult(self.name, workload, results,
+                              meta={"groups": len(groups),
+                                    "pallas_calls": calls})

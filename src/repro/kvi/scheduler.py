@@ -1,0 +1,130 @@
+"""Continuous-admission hart scheduler: pack queued programs onto free
+harts, then execute the packed workload on any backend.
+
+The slot/free-list policy mirrors ``repro.serving.engine.ServingEngine``
+at coprocessor granularity: the scheduler's "slots" are harts, a hart is
+*free* when its accumulated estimated cycles is the minimum of all harts,
+and admission is continuous — each queued program is dispatched to the
+hart that will free up first (earliest-finish-first), in submission
+order. There is no head-of-line blocking: a long matmul on one hart does
+not delay conv instances landing on the other two.
+
+Estimates come from a solo cycle simulation of each distinct program
+(cached by structure), so packing reflects real kernel latencies rather
+than instruction counts; the *final* timing of the packed workload — with
+true inter-hart contention per scheme — comes from running it through
+``CycleSimBackend.run_workload``.
+
+    sched = HartScheduler(n_harts=3)
+    for p in programs:
+        sched.submit(p)
+    result = sched.run(get_backend("cyclesim"))   # dispatch + execute
+    # or, to inspect the packing first:
+    #   workload = sched.dispatch()               # drains the queue
+    #   result = backend.run_workload(workload)
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.configs.base import KlessydraConfig
+from repro.kvi.ir import KviProgram
+from repro.kvi.workload import (HartAssignment, KviWorkload, WorkloadEntry,
+                                WorkloadResult, structural_signature)
+
+# the estimator's machine model: one representative scheme (heterogeneous
+# MIMD — per-hart SPMI — because packing decisions are per-hart)
+_EST_CFG = KlessydraConfig("sched_est", M=3, F=1, D=4, spm_kbytes=64)
+
+
+def simulated_cycles(program: KviProgram,
+                     cfg: Optional[KlessydraConfig] = None) -> int:
+    """Solo cycle count of one program on one hart (no contention) — the
+    scheduler's latency estimate."""
+    from repro.core.simulator import simulate
+    from repro.kvi.lowering import lower
+    cfg = cfg or _EST_CFG
+    return simulate(cfg, [lower(program, cfg).items]).cycles
+
+
+@dataclass
+class Ticket:
+    """One queued program and where it ended up."""
+
+    tid: int
+    program: KviProgram
+    est_cycles: int = 0
+    hart: Optional[int] = None           # assigned at dispatch
+    start_est: int = 0                   # estimated admission cycle
+
+
+class HartScheduler:
+    """Earliest-finish-first packer over ``n_harts`` hart streams."""
+
+    def __init__(self, n_harts: int = 3,
+                 estimator: Optional[Callable[[KviProgram], int]] = None,
+                 est_config: Optional[KlessydraConfig] = None):
+        self.n_harts = n_harts
+        self._estimator = estimator
+        self._est_cfg = est_config or _EST_CFG
+        self._est_cache: Dict[tuple, int] = {}   # structure -> cycles
+        self._tids = itertools.count()
+        self.queue: List[Ticket] = []
+        self.dispatched: List[Ticket] = []
+
+    # ------------------------------------------------------------------
+    def estimate(self, program: KviProgram) -> int:
+        """Estimated solo cycles (cached per program structure)."""
+        if self._estimator is not None:
+            return int(self._estimator(program))
+        key = structural_signature(program)
+        if key not in self._est_cache:
+            self._est_cache[key] = simulated_cycles(program, self._est_cfg)
+        return self._est_cache[key]
+
+    def submit(self, program: KviProgram) -> Ticket:
+        """Queue one program; returns its ticket."""
+        t = Ticket(next(self._tids), program, self.estimate(program))
+        self.queue.append(t)
+        return t
+
+    # ------------------------------------------------------------------
+    def dispatch(self, name: str = "scheduled") -> KviWorkload:
+        """Drain the queue onto harts (continuous admission): each program
+        goes to the hart with the earliest estimated finish time, in
+        submission order. Returns the packed workload; per-ticket ``hart``
+        and ``start_est`` record the placement."""
+        if not self.queue:
+            raise ValueError("nothing queued")
+        # (accumulated_cycles, hart) min-heap = the free list ordered by
+        # when each hart frees up; hart index breaks ties (harc priority)
+        loads = [(0, h) for h in range(self.n_harts)]
+        heapq.heapify(loads)
+        entries = []
+        for t in self.queue:
+            load, h = heapq.heappop(loads)
+            t.hart, t.start_est = h, load
+            heapq.heappush(loads, (load + t.est_cycles, h))
+            entries.append(WorkloadEntry(t.program, HartAssignment(h)))
+        self.dispatched.extend(self.queue)
+        self.queue = []
+        return KviWorkload(name, tuple(entries),
+                           meta={"scheduler": "earliest_finish",
+                                 "n_harts": self.n_harts})
+
+    def run(self, backend, name: str = "scheduled") -> WorkloadResult:
+        """Dispatch whatever is queued and execute it on ``backend``."""
+        return backend.run_workload(self.dispatch(name))
+
+    # ------------------------------------------------------------------
+    @property
+    def hart_loads(self) -> List[int]:
+        """Estimated accumulated cycles per hart over all dispatched work."""
+        loads = [0] * self.n_harts
+        for t in self.dispatched:
+            if t.hart is not None:
+                loads[t.hart] += t.est_cycles
+        return loads

@@ -12,6 +12,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 # and benches must see 1 device; multi-device dry-run tests spawn
 # subprocesses that set it themselves.
 
+import signal
+
 import numpy as np
 import pytest
 
@@ -19,3 +21,38 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Per-test timeout (no pytest-timeout dependency): a SIGALRM fired inside
+# the test call raises, so a hung test FAILS fast instead of wedging the
+# whole run. CI passes --per-test-timeout; local runs default to off.
+# Limitation: CPython only delivers the signal between bytecodes, so a
+# hang inside one long C call (e.g. a single XLA compile) is not
+# interrupted — the job-level timeout-minutes remains the backstop there.
+# ---------------------------------------------------------------------------
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--per-test-timeout", type=float, default=0.0, metavar="SECONDS",
+        help="fail any single test taking longer than SECONDS "
+             "(0 = disabled; needs SIGALRM, i.e. POSIX main thread)")
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    limit = item.config.getoption("--per-test-timeout")
+    if not limit or not hasattr(signal, "SIGALRM"):
+        return (yield)
+
+    def _timed_out(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded --per-test-timeout={limit:g}s")
+
+    old_handler = signal.signal(signal.SIGALRM, _timed_out)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old_handler)

@@ -49,9 +49,24 @@ class TestConv2dDifferential:
 
 
 class TestMatmulDifferential:
+    @pytest.mark.slow
     def test_matmul64_resident(self, rng):
         A = rng.integers(-64, 64, (64, 64)).astype(np.int32)
         B = rng.integers(-64, 64, (64, 64)).astype(np.int32)
+        prog = matmul_program(A, B, resident=True)
+        res = run_all(prog)
+        want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+        got = {n: matmul_result(r) for n, r in res.items()}
+        assert np.array_equal(got["oracle"], want)
+        assert np.array_equal(got["oracle"], got["cyclesim"])
+        np.testing.assert_allclose(got["pallas"], got["oracle"])
+        assert_paper_invariant(res["cyclesim"])
+
+    def test_matmul16_resident_fast(self, rng):
+        """SPM-resident path at a default-suite-friendly size (the 64x64
+        version is @slow)."""
+        A = rng.integers(-64, 64, (16, 16)).astype(np.int32)
+        B = rng.integers(-64, 64, (16, 16)).astype(np.int32)
         prog = matmul_program(A, B, resident=True)
         res = run_all(prog)
         want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
@@ -90,9 +105,9 @@ class TestFftDifferential:
         np.testing.assert_allclose(got["pallas"], got["oracle"])
         assert_paper_invariant(res["cyclesim"])
 
-    def test_fft64_fast(self, rng):
-        re = rng.integers(-2048, 2048, 64).astype(np.int32)
-        im = rng.integers(-2048, 2048, 64).astype(np.int32)
+    def test_fft32_fast(self, rng):
+        re = rng.integers(-2048, 2048, 32).astype(np.int32)
+        im = rng.integers(-2048, 2048, 32).astype(np.int32)
         prog = fft_program(re, im)
         res = run_all(prog)
         got = {n: fft_result(r) for n, r in res.items()}

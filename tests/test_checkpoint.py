@@ -73,6 +73,7 @@ def test_interval_gating(tmp_path, rng):
     mgr.wait()
 
 
+@pytest.mark.slow
 def test_resume_equivalence(tmp_path, rng):
     """train k steps; checkpoint; train k more == restore + train k more."""
     import jax

@@ -40,7 +40,15 @@ def make_batch(cfg, shape, rng):
     return out
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# one representative arch keeps train-step coverage in the default suite;
+# the full sweep (each case costs 8-25s of jit on CPU) runs with -m slow
+_FAST_TRAIN_ARCH = "llama3.2-1b"
+
+
+@pytest.mark.parametrize("arch", [
+    a if a == _FAST_TRAIN_ARCH else pytest.param(
+        a, marks=pytest.mark.slow)
+    for a in ARCHS])
 def test_train_step_shapes_and_finite(arch, rng):
     cfg, par, rules, params = build(arch)
     shape = ShapeConfig("t", "train", 64, 2)

@@ -56,6 +56,7 @@ def test_moe_whole_batch_group_exact(rng):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_mixed_precision_step_close_to_f32(rng):
     """mp training must track the f32 step (bf16 grads, f32 master)."""
     from repro.configs.base import ShapeConfig

@@ -29,6 +29,7 @@ def test_paper_pipeline_end_to_end():
     assert cycles["het_mimd_d8"] < cycles["simd_d8"]
 
 
+@pytest.mark.slow
 def test_training_overfits_fixed_batch():
     """The optimizer + model together actually learn (loss drops 40%+)."""
     spec = get_spec("llama3.2-1b")
@@ -88,6 +89,7 @@ def test_train_then_serve_roundtrip(tmp_path):
     assert outs[0] == outs[1]
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_large_batch():
     """grad_accum=2 over a split batch == one big batch step. f32 compute:
     exact to ~1e-5 (bf16 adds harmless reduction-order noise)."""
