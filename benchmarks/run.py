@@ -17,12 +17,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
-                         "roofline,kvi_batch")
+                         "roofline,kvi_batch,kvi_passes")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_kvi_batch, fig2_dlp_tlp, fig3_exec_time,
-                            fig4_energy, kernel_micro, roofline_report,
-                            table2_cycles, table3_filters)
+    from benchmarks import (bench_kvi_batch, bench_kvi_passes, fig2_dlp_tlp,
+                            fig3_exec_time, fig4_energy, kernel_micro,
+                            roofline_report, table2_cycles, table3_filters)
     benches = {
         "table2": (table2_cycles,
                    lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
@@ -40,6 +40,11 @@ def main(argv=None) -> int:
         "kvi_batch": (bench_kvi_batch,
                       lambda r: "batched_fewer_dispatches="
                       f"{r['checks']['batched_fewer_dispatches']}"),
+        "kvi_passes": (bench_kvi_passes,
+                       lambda r: "cyclesim_reduced="
+                       f"{r['checks']['cyclesim_reduced']},"
+                       "pallas_calls_reduced="
+                       f"{r['checks']['pallas_calls_reduced']}"),
     }
     only = [s for s in args.only.split(",") if s]
     rows = []

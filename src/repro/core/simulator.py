@@ -84,6 +84,13 @@ class Simulator:
             spmi = ("spmi", 0) if cfg.M == 1 else ("spmi", hart)
             return [(("lsu", 0), dur), (spmi, dur)]
         unit_c, spmi_c = mfu_cycles(instr, cfg.D, cfg.vector_setup_cycles)
+        # FU chaining (repro.kvi.lowering, chaining=True): an op fed
+        # directly by the previous op's result stream skips its startup
+        # latency; plain traces carry no discount and are untouched
+        disc = getattr(instr, "chain_discount", 0)
+        if disc:
+            unit_c = max(1, unit_c - disc)
+            spmi_c = max(1, spmi_c - disc)
         if cfg.M == 1 and cfg.F == 1:
             # shared: one SPMI + one MFU for everyone; SPMI streaming binds
             return [(("spmi", 0), spmi_c), (("unit", 0), unit_c)]

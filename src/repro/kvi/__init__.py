@@ -18,6 +18,12 @@ conv/FFT/matmul protocol) — and execute it with
 ``backend.run_workload(workload)``. :class:`~repro.kvi.scheduler.
 HartScheduler` packs a queue of programs onto free harts continuously.
 
+Compiler pipeline: every ``run_workload()`` first sends each program
+through the optimizing pass pipeline (``repro.kvi.passes``: copy_prop ->
+dce -> fuse_regions), and lowering binds vregs to scratchpad addresses
+with liveness-based register reuse. ``get_backend(name, passes=())``
+runs the raw program; an impossible fit raises :class:`SpmOverflowError`.
+
 See ``repro.kvi.programs`` for the paper's conv2d / FFT-256 / matmul
 kernels on this API, and README.md for the full protocol description.
 """
@@ -27,7 +33,10 @@ from repro.kvi.backend import (Backend, BackendBase, BackendResult,
 from repro.kvi.ir import (ELEMWISE_OPS, MEM_OPS, REDUCTION_OPS, KviInstr,
                           KviOp, KviProgram, KviProgramBuilder, MemRef,
                           Ref, ScalarBlock, VReg, View)
-from repro.kvi.lowering import LoweredTrace, lower
+from repro.kvi.lowering import LoweredTrace, SpmOverflowError, lower
+from repro.kvi.passes import (DEFAULT_PASSES, FusedRegion, FusionPlan,
+                              PassPipeline, default_pipeline,
+                              optimize_program, plan_fusion_regions)
 from repro.kvi.workload import (HartAssignment, KviWorkload, WorkloadEntry,
                                 WorkloadResult, structural_signature)
 
@@ -36,6 +45,8 @@ __all__ = [
     "get_backend", "register_backend", "KviInstr", "KviOp", "KviProgram",
     "KviProgramBuilder", "MemRef", "Ref", "ScalarBlock", "VReg", "View",
     "ELEMWISE_OPS", "MEM_OPS", "REDUCTION_OPS", "LoweredTrace", "lower",
-    "HartAssignment", "KviWorkload", "WorkloadEntry", "WorkloadResult",
-    "structural_signature",
+    "SpmOverflowError", "PassPipeline", "DEFAULT_PASSES",
+    "default_pipeline", "optimize_program", "plan_fusion_regions",
+    "FusedRegion", "FusionPlan", "HartAssignment", "KviWorkload",
+    "WorkloadEntry", "WorkloadResult", "structural_signature",
 ]

@@ -73,11 +73,33 @@ class Backend(Protocol):
 
 class BackendBase:
     """Shared backend behavior: the legacy single-program ``run()`` is a
-    thin wrapper over ``run_workload()`` on a one-entry workload."""
+    thin wrapper over ``run_workload()`` on a one-entry workload, and
+    ``optimize_workload()`` applies the optimizing pass pipeline
+    (``repro.kvi.passes``) every ``run_workload()`` implementation calls
+    first.
+
+    ``self.passes`` selects the pipeline: ``None`` (the default) runs
+    the full ``copy_prop -> dce -> fuse_regions`` pipeline, ``()``
+    disables optimization entirely, and a sequence of pass names or
+    callables runs a custom pipeline. Every built-in backend ctor
+    forwards a ``passes=`` keyword here.
+    """
+
+    passes = None                    # None => default pipeline; () => off
 
     def run(self, program: KviProgram) -> BackendResult:
         from repro.kvi.workload import KviWorkload
         return self.run_workload(KviWorkload.single(program)).entry_result(0)
+
+    def optimize_workload(self, workload: "KviWorkload") -> "KviWorkload":
+        """The optimized workload this backend actually executes. Each
+        distinct program object is optimized once; pipelines that change
+        nothing hand back the identical workload object."""
+        from repro.kvi.passes import PassPipeline
+        pipe = PassPipeline.from_spec(getattr(self, "passes", None))
+        if not pipe:
+            return workload
+        return workload.map_programs(pipe.run)
 
 
 _REGISTRY: Dict[str, Callable[..., Backend]] = {}

@@ -52,9 +52,17 @@ class CycleSimBackend(BackendBase):
 
     def __init__(self,
                  schemes: Optional[Dict[str, KlessydraConfig]] = None,
-                 replicate_harts: bool = True):
+                 replicate_harts: bool = True,
+                 passes=None, chaining: bool = False):
         self.schemes = schemes or default_schemes()
         self.replicate_harts = replicate_harts
+        self.passes = passes
+        # FU chaining: ops inside a planned FusedRegion (after the head)
+        # skip their startup latency — the paper's back-to-back SPM-
+        # resident op streams. Off by default so the Table 2/3 numbers
+        # stay the legacy ones; needs the fuse_regions pass to plan the
+        # regions (no effect with passes=()).
+        self.chaining = chaining
 
     def run(self, program: KviProgram) -> BackendResult:
         """Single-program protocol: replicate on all harts (the paper's
@@ -75,6 +83,7 @@ class CycleSimBackend(BackendBase):
         """Timing for the whole workload per scheme, plus (with
         ``functional=True``) per-entry outputs. Timing-only callers (the
         Table-2 sweeps) pass ``functional=False`` to skip the Mfu replay."""
+        workload = self.optimize_workload(workload)
         timing: Dict[str, SimResult] = {}
         entry_outputs = None if functional else \
             [{} for _ in workload.entries]
@@ -84,7 +93,8 @@ class CycleSimBackend(BackendBase):
             traces = {}
             for e in workload.entries:
                 if id(e.program) not in traces:
-                    traces[id(e.program)] = lower(e.program, cfg)
+                    traces[id(e.program)] = lower(e.program, cfg,
+                                                  chaining=self.chaining)
             if entry_outputs is None:
                 # functional values: same trace + Mfu path as the oracle
                 # (shared dedup/copy semantics in dedup_entry_outputs),

@@ -22,6 +22,7 @@ their operands and backends pack lanes accordingly.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -227,6 +228,15 @@ class KviProgram:
     def mem_by_id(self, mid: int) -> MemRef:
         return self.mems[mid]
 
+    def replace(self, **kw) -> "KviProgram":
+        """A copy with the given fields swapped — how optimizing passes
+        rewrite programs (``mem_init`` is shared, never mutated)."""
+        return dataclasses.replace(self, **kw)
+
+    def with_meta(self, **kw) -> "KviProgram":
+        """A copy with extra ``meta`` entries (e.g. the fusion plan)."""
+        return self.replace(meta={**self.meta, **kw})
+
     def __repr__(self):
         return (f"KviProgram({self.name!r}, {len(self.items)} items, "
                 f"{len(self.vregs)} vregs, {len(self.mems)} mem bufs)")
@@ -317,6 +327,14 @@ class KviProgramBuilder:
                 f"kmemld: buffer {mem.name!r} ({mem.length} elems) does "
                 f"not fit destination window of {len(d)} elems")
         n = length if length is not None else min(len(d), mem.length)
+        if n > mem.length or n > len(d):
+            # the MFU transfers exactly the whole buffer — a declared
+            # length beyond the buffer (or the window) would misstate
+            # what the instruction writes to every analysis downstream
+            raise ValueError(
+                f"kmemld: length {n} exceeds buffer {mem.name!r} "
+                f"({mem.length} elems) or destination window "
+                f"({len(d)} elems)")
         return self._emit(KviOp.KMEMLD, d.ref, Ref("mem", mem.id), None,
                           0, n, d.elem_bytes)
 

@@ -1,27 +1,119 @@
 """Lowering: KviProgram (virtual registers) -> core Instr trace (SPM
 addresses), shared by the oracle and cycle-sim backends.
 
-Virtual registers become SPM allocations (bump allocator, SPM-line
-aligned, exactly like a programmer laying out the scratchpads); memory
-buffers become main-memory handles. Reduction instructions whose IR dst is
-a vreg view get the legacy ``rf_store`` annotation — the register-file
-result spilled to its architectural destination, modelled as one scalar
-store by the cycle simulator (see ``repro.core.programs``).
+Virtual registers become SPM allocations via **liveness-based linear
+scan**: each vreg's live range (first touch .. last touch) is computed
+with :mod:`repro.kvi.passes.liveness` and registers whose ranges do not
+overlap share scratchpad lines. Programs whose *peak-live* footprint
+fits the SPM therefore lower even when the *total* vreg footprint does
+not — the reuse a programmer would hand-craft. A genuine overflow raises
+:class:`SpmOverflowError` naming the program, its peak-live bytes and
+the capacity.
+
+Memory buffers become main-memory handles. Reduction instructions whose
+IR dst is a vreg view get the legacy ``rf_store`` annotation — the
+register-file result spilled to its architectural destination, modelled
+as one scalar store by the cycle simulator (see ``repro.core.programs``).
+
+With ``chaining=True`` the lowered element-wise instructions inside a
+planned :class:`~repro.kvi.passes.fusion.FusedRegion` (after the first)
+carry a ``chain_discount`` — the FU-chaining setup savings the cycle
+simulator subtracts (the paper's back-to-back SPM-resident op streams).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Union
+from typing import Dict, List, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import KlessydraConfig
 from repro.core.isa import Instr, Scalar
-from repro.core.spm import SpmSpace
+from repro.core.spm import SpmError, SpmSpace
 from repro.kvi.ir import (REDUCTION_OPS, KviInstr, KviOp, KviProgram,
                           ScalarBlock)
+from repro.kvi.passes.fusion import META_KEY, FusionPlan
+from repro.kvi.passes.liveness import peak_live_bytes, reg_intervals
 
 Item = Union[Instr, Scalar]
+
+
+class SpmOverflowError(SpmError):
+    """The SPM allocator cannot place a program's vregs. Usually the
+    peak-live footprint genuinely exceeds capacity (no register-reuse
+    schedule can fit it); rarely the linear scan fragments a fit that
+    exists in principle — the message distinguishes the two."""
+
+    def __init__(self, program: KviProgram, peak_live: int, capacity: int,
+                 config: KlessydraConfig):
+        self.program_name = program.name
+        self.peak_live_bytes = peak_live
+        self.capacity_bytes = capacity
+        self.fragmented = peak_live <= capacity
+        spm = f"{capacity} B (N={config.N} x {config.spm_kbytes} KiB)"
+        if self.fragmented:
+            msg = (f"SPM overflow lowering {program.name!r}: peak-live "
+                   f"vreg footprint {peak_live} B fits the SPM capacity "
+                   f"{spm}, but linear-scan placement fragmented it — "
+                   f"reorder register lifetimes or raise spm_kbytes")
+        else:
+            msg = (f"SPM overflow lowering {program.name!r}: peak-live "
+                   f"vreg footprint {peak_live} B exceeds SPM capacity "
+                   f"{spm}; no live-range reuse can fit this program — "
+                   f"shrink vectors or raise spm_kbytes")
+        super().__init__(msg)
+
+
+def _align_up(x: int, a: int) -> int:
+    return -(-x // a) * a
+
+
+def allocate_vregs(program: KviProgram,
+                   config: KlessydraConfig) -> Dict[int, int]:
+    """Linear-scan SPM allocation: vreg id -> byte address.
+
+    Registers are placed in live-range start order at the lowest
+    SPM-line-aligned address not occupied by any register whose live
+    range overlaps. Registers not fully defined before first read are
+    pinned live-from-start so they never inherit recycled lines (their
+    unwritten elements read as zeros on every backend). Untouched vregs
+    get no address (nothing references them). Raises
+    :class:`SpmOverflowError` on overflow.
+    """
+    line = max(config.D * 4, 4)
+    capacity = config.N * config.spm_kbytes * 1024
+    intervals = reg_intervals(program, pin_uninitialized=True)
+    placed: List[Tuple[int, int, int, int]] = []   # (addr, size, start, end)
+    addr_of: Dict[int, int] = {}
+    order = sorted(intervals, key=lambda rid: (intervals[rid][0], rid))
+    for rid in order:
+        r = program.vreg_by_id(rid)
+        size = _align_up(r.length * r.elem_bytes, line)
+        s, e = intervals[rid]
+        busy = sorted((a, sz) for a, sz, s2, e2 in placed
+                      if not (e < s2 or e2 < s))
+        cur = 0
+        for a, sz in busy:
+            if a - cur >= size:
+                break
+            cur = max(cur, a + sz)
+        if cur + size > capacity:
+            raise SpmOverflowError(
+                program,
+                peak_live_bytes(program, line, pin_uninitialized=True),
+                capacity, config)
+        placed.append((cur, size, s, e))
+        addr_of[rid] = cur
+    return addr_of
+
+
+def _chained_items(program: KviProgram) -> frozenset:
+    """Item indices eligible for the FU-chaining discount: every region
+    member after its region's first op (the head pays full setup)."""
+    plan = program.meta.get(META_KEY)
+    if not isinstance(plan, FusionPlan):
+        return frozenset()
+    return frozenset(i for r in plan.regions for i in r.items[1:])
 
 
 @dataclass
@@ -51,22 +143,23 @@ class LoweredTrace:
         return out
 
 
-def lower(program: KviProgram, config: KlessydraConfig) -> LoweredTrace:
+def lower(program: KviProgram, config: KlessydraConfig,
+          chaining: bool = False) -> LoweredTrace:
     """Bind a program's vregs/buffers to one machine config and emit the
     dynamic Instr/Scalar trace the simulator and Mfu consume."""
     spm = SpmSpace(config)
-    vreg_addr = {r.id: spm.alloc(r.name, r.length, r.elem_bytes)
-                 for r in program.vregs}
+    vreg_addr = allocate_vregs(program, config)
     # legacy memory handles are the MemRef ids (declaration order)
     mem = {m.id: program.mem_init[m.id].copy() for m in program.mems}
     out_handles = {m.name: m.id for m in program.outputs}
+    chained = _chained_items(program) if chaining else frozenset()
 
     def vaddr(ref):
         r = program.vreg_by_id(ref.id)
         return vreg_addr[ref.id] + r.elem_bytes * ref.offset
 
     items: List[Item] = []
-    for it in program.items:
+    for idx, it in enumerate(program.items):
         if isinstance(it, ScalarBlock):
             items.append(Scalar(it.count))
             continue
@@ -91,11 +184,16 @@ def lower(program: KviProgram, config: KlessydraConfig) -> LoweredTrace:
                           dreg.elem_bytes)
             items.append(i)
         else:
-            items.append(Instr(op.value, dst=vaddr(it.dst),
-                               src1=vaddr(it.src1),
-                               src2=vaddr(it.src2) if it.src2 is not None
-                               else None,
-                               scalar=it.scalar, length=it.length,
-                               elem_bytes=it.elem_bytes))
+            i = Instr(op.value, dst=vaddr(it.dst),
+                      src1=vaddr(it.src1),
+                      src2=vaddr(it.src2) if it.src2 is not None
+                      else None,
+                      scalar=it.scalar, length=it.length,
+                      elem_bytes=it.elem_bytes)
+            if idx in chained:
+                # chained op: operands stream straight off the previous
+                # op's result lines — skip the FU startup latency
+                i.chain_discount = config.vector_setup_cycles
+            items.append(i)
     return LoweredTrace(program, config, items, spm, mem, vreg_addr,
                         out_handles)

@@ -23,12 +23,18 @@ _ORACLE_CFG = KlessydraConfig("oracle", M=1, F=1, D=4, spm_kbytes=256)
 @register_backend("oracle")
 class OracleBackend(BackendBase):
     """Functional reference executor (no timing model). Workloads execute
-    entry-by-entry — hart assignments do not change functional values."""
+    entry-by-entry — hart assignments do not change functional values.
 
-    def __init__(self, config: Optional[KlessydraConfig] = None):
+    ``passes=()`` runs the raw, unoptimized program — the ground truth
+    the differential fuzz tests compare every optimized run against."""
+
+    def __init__(self, config: Optional[KlessydraConfig] = None,
+                 passes=None):
         self.config = config or _ORACLE_CFG
+        self.passes = passes
 
     def run_workload(self, workload: KviWorkload) -> WorkloadResult:
+        workload = self.optimize_workload(workload)
         outs = dedup_entry_outputs(
             workload.entries,
             lambda p: lower(p, self.config).execute())

@@ -1,12 +1,17 @@
 """PallasBackend — compiles KVI programs onto fused Pallas kernels.
 
 The Klessydra insight, translated to TPU: vector operands live in the SPM
-across a whole *sequence* of vector instructions. Here, maximal runs of
-element-wise instructions are compiled into a **single fused
-``pl.pallas_call``** (one VMEM-resident slot file, one HBM read per input
-window, one write per output window); reductions go through the Pallas
-kdotp/kvred kernels; ``kmemld``/``kmemstr``/``kvcp`` are data movement
-handled on the register file.
+across a whole *sequence* of vector instructions. Maximal runs of
+element-wise instructions — the :class:`~repro.kvi.passes.fusion.
+FusedRegion` plan computed by the ``fuse_regions`` pass and attached to
+the program's metadata — are compiled into a **single fused
+``pl.pallas_call``** each (one VMEM-resident slot file, one HBM read per
+input window, one write per output window); reductions go through the
+Pallas kdotp/kvred kernels; ``kmemld``/``kmemstr``/``kvcp`` are data
+movement handled on the register file. This backend no longer derives
+the fusion segmentation itself: it executes the plan handed to it,
+re-planning (through the same planner) only when the program carries no
+plan (``passes=()``) or one planned under different slot-file bounds.
 
 Workload batching: a homogeneous :class:`~repro.kvi.workload.KviWorkload`
 (N data instances of one program structure) executes with a **batch grid
@@ -35,6 +40,9 @@ from repro.kernels.common import INTERPRET, pick_block
 from repro.kvi.backend import (BackendBase, BackendResult, register_backend)
 from repro.kvi.ir import (ELEMWISE_OPS, KviInstr, KviOp, KviProgram,
                           ScalarBlock, np_dtype)
+from repro.kvi.passes.fusion import (MAX_FUSED_INPUTS, MAX_FUSED_OPS,
+                                     META_KEY, FusedRegion, FusionPlan,
+                                     plan_fusion_regions)
 from repro.kvi.workload import (KviWorkload, WorkloadResult,
                                 structural_signature)
 
@@ -162,33 +170,14 @@ def fused_elementwise_call(program: Sequence[SlotOp],
 
 
 # ---------------------------------------------------------------------------
-# Whole-program executor: walks a KviProgram, fusing element-wise runs.
-# The walk is batched: the register file and main memory carry a leading
-# batch dimension of N program instances sharing one structure.
+# Whole-program executor: walks a KviProgram, executing the planned
+# FusedRegions. The walk is batched: the register file and main memory
+# carry a leading batch dimension of N program instances sharing one
+# structure.
 # ---------------------------------------------------------------------------
 
 # a slot key: one (vreg id, element offset, length) window
 _Key = Tuple[int, int, int]
-
-
-def _overlaps(a: _Key, b: _Key) -> bool:
-    return (a[0] == b[0] and a != b
-            and a[1] < b[1] + b[2] and b[1] < a[1] + a[2])
-
-
-class _Segment:
-    """A pending run of element-wise instructions being fused."""
-
-    def __init__(self, length: int, dtype):
-        self.length = length
-        self.dtype = dtype
-        self.ops: List[SlotOp] = []
-        self.slot_of: Dict[_Key, int] = {}
-        self.gathered: List[_Key] = []   # keys loaded from the regfile
-        self.written: List[_Key] = []    # keys to write back at flush
-
-    def n_slots(self) -> int:
-        return len(self.slot_of)
 
 
 @register_backend("pallas")
@@ -197,16 +186,21 @@ class PallasBackend(BackendBase):
     ``interpret=True`` — the default off-TPU).
 
     max_fused_ops / max_fused_inputs bound how much of the element-wise
-    subgraph one ``pallas_call`` swallows before flushing (VMEM slot-file
-    pressure). ``fused_calls`` counts issued ``pallas_call``s — a batch of
-    N homogeneous instances issues the same number as a single instance."""
+    subgraph one ``pallas_call`` swallows (VMEM slot-file pressure);
+    programs optimized by the default pipeline arrive with a
+    :class:`FusionPlan` under the same bounds, which is executed as-is.
+    ``fused_calls`` counts issued ``pallas_call``s — a batch of N
+    homogeneous instances issues the same number as a single instance."""
 
     def __init__(self, interpret: Optional[bool] = None, block: int = 1024,
-                 max_fused_ops: int = 64, max_fused_inputs: int = 24):
+                 max_fused_ops: int = MAX_FUSED_OPS,
+                 max_fused_inputs: int = MAX_FUSED_INPUTS,
+                 passes=None):
         self.interpret = INTERPRET if interpret is None else interpret
         self.block = block
         self.max_fused_ops = max_fused_ops
         self.max_fused_inputs = max_fused_inputs
+        self.passes = passes
         self.fused_calls = 0             # observability: pallas_call count
         self.reduce_calls = 0           # vmapped reduction kernel launches
 
@@ -222,40 +216,30 @@ class PallasBackend(BackendBase):
         regfile[rid] = regfile[rid].at[:, off:off + n].set(
             val.astype(regfile[rid].dtype))
 
-    # -- segment management ----------------------------------------------
-    def _flush(self, seg: Optional[_Segment], regfile):
-        if seg is None or not seg.ops:
-            return None
-        inputs = [(seg.slot_of[k], self._slice(regfile, k))
-                  for k in seg.gathered]
-        out_keys = seg.written
+    # -- fusion plan -------------------------------------------------------
+    def _plan(self, program: KviProgram) -> FusionPlan:
+        """The program's attached fusion plan, or a fresh one when absent
+        (``passes=()``) / planned under different slot-file bounds."""
+        plan = program.meta.get(META_KEY)
+        if (isinstance(plan, FusionPlan)
+                and plan.max_ops == self.max_fused_ops
+                and plan.max_inputs == self.max_fused_inputs):
+            return plan
+        return plan_fusion_regions(program, self.max_fused_ops,
+                                   self.max_fused_inputs)
+
+    def _run_region(self, region: FusedRegion, regfile):
+        """One planned region = ONE fused ``pallas_call`` over the whole
+        batch grid."""
+        inputs = [(slot, self._slice(regfile, key))
+                  for key, slot in region.inputs]
         outs = fused_elementwise_call(
-            seg.ops, inputs, [seg.slot_of[k] for k in out_keys],
-            n_slots=seg.n_slots(), block=self.block,
+            region.ops, inputs, [slot for _, slot in region.outputs],
+            n_slots=region.n_slots, block=self.block,
             interpret=self.interpret, batched=True)
         self.fused_calls += 1
-        for k, v in zip(out_keys, outs):
-            self._set(regfile, k, v)
-        return None
-
-    def _slot_for(self, seg: _Segment, key: _Key, is_dst: bool):
-        """Slot index for ``key``; None means the segment must be flushed
-        first (window overlaps pending writes, or slot file full)."""
-        if (key not in seg.written
-                and any(_overlaps(key, w) for w in seg.written)):
-            # reads: the gathered window went stale; writes: two
-            # overlapping written windows would flush back in first-write
-            # order — both hazards require draining the segment first
-            return None
-        if key in seg.slot_of:
-            return seg.slot_of[key]
-        if not is_dst and len(seg.gathered) >= self.max_fused_inputs:
-            return None
-        s = len(seg.slot_of)
-        seg.slot_of[key] = s
-        if not is_dst:
-            seg.gathered.append(key)
-        return s
+        for (key, _slot), v in zip(region.outputs, outs):
+            self._set(regfile, key, v)
 
     # -- scalar reductions -------------------------------------------------
     def _reduce(self, i: KviInstr, regfile):
@@ -293,8 +277,8 @@ class PallasBackend(BackendBase):
     def _run_batch(self, programs: Sequence[KviProgram]
                    ) -> List[Dict[str, np.ndarray]]:
         """Execute N structurally identical programs (different data) in
-        one batched walk: every fused segment is one ``pallas_call`` over
-        a batch grid, every reduction one vmapped kernel."""
+        one batched walk: every planned region is one ``pallas_call``
+        over a batch grid, every reduction one vmapped kernel."""
         proto = programs[0]
         N = len(programs)
         regfile = {r.id: jnp.zeros((N, r.length), np_dtype(r.elem_bytes))
@@ -302,46 +286,20 @@ class PallasBackend(BackendBase):
         mem = {m.id: np.stack([np.asarray(p.mem_init[m.id]).reshape(-1)
                                for p in programs])
                for m in proto.mems}
-        seg: Optional[_Segment] = None
+        plan = self._plan(proto)
+        region_at = {r.items[0]: r for r in plan.regions}
+        fused = plan.member_items()
 
-        for it in proto.items:
+        for idx, it in enumerate(proto.items):
             if isinstance(it, ScalarBlock):
                 continue                 # no timing model here
-            i: KviInstr = it
-            if i.op in ELEMWISE_OPS and i.op is not KviOp.KVCP:
-                dt = jnp.dtype(np_dtype(i.elem_bytes))
-                if (seg is not None and
-                        (seg.length != i.length or seg.dtype != dt
-                         or len(seg.ops) >= self.max_fused_ops)):
-                    seg = self._flush(seg, regfile)
-                while True:
-                    if seg is None:
-                        seg = _Segment(i.length, dt)
-                    slots = []
-                    ok = True
-                    for ref, is_dst in ((i.src1, False), (i.src2, False),
-                                        (i.dst, True)):
-                        if ref is None:
-                            slots.append(None)
-                            continue
-                        s = self._slot_for(
-                            seg, (ref.id, ref.offset, i.length), is_dst)
-                        if s is None:
-                            ok = False
-                            break
-                        slots.append(s)
-                    if ok:
-                        break
-                    seg = self._flush(seg, regfile)
-                s1, s2, d = slots
-                seg.ops.append((i.op.value, d, s1, s2, i.scalar))
-                dkey = (i.dst.id, i.dst.offset, i.length)
-                if dkey not in seg.written:
-                    seg.written.append(dkey)
+            region = region_at.get(idx)
+            if region is not None:
+                self._run_region(region, regfile)
                 continue
-
-            # everything else ends the pending element-wise run
-            seg = self._flush(seg, regfile)
+            if idx in fused:
+                continue                 # executed with its region head
+            i: KviInstr = it
             if i.op is KviOp.KMEMLD:
                 arr = mem[i.src1.id]
                 # Mfu semantics: the whole buffer lands in the scratchpad
@@ -357,7 +315,6 @@ class PallasBackend(BackendBase):
                 self._set(regfile, (i.dst.id, i.dst.offset, i.length), v)
             else:
                 self._reduce(i, regfile)
-        self._flush(seg, regfile)
 
         results = []
         for b in range(N):
@@ -374,6 +331,7 @@ class PallasBackend(BackendBase):
         batched walk (one compile + one dispatch per fused segment for the
         whole group). Hart assignments carry no timing meaning here — on
         TPU the batch grid IS the hart-level parallelism."""
+        workload = self.optimize_workload(workload)
         calls_before = self.fused_calls + self.reduce_calls
         groups: Dict[tuple, List[int]] = {}
         for idx, e in enumerate(workload.entries):

@@ -1,0 +1,39 @@
+"""repro.kvi.passes — the optimizing pass pipeline over KviProgram.
+
+Runs on the backend-neutral IR *before* any backend sees the program, so
+every executor benefits identically:
+
+  * :func:`~repro.kvi.passes.copy_prop.copy_prop` — bypass whole-register
+    ``kvcp`` moves (they break fusion regions and cost SPM copies),
+  * :func:`~repro.kvi.passes.dce.dce` — drop never-observed instructions
+    and stranded vregs (liveness-driven),
+  * :func:`~repro.kvi.passes.fusion.fuse_regions` — plan maximal
+    element-wise chains ONCE as :class:`~repro.kvi.passes.fusion.
+    FusedRegion` metadata (Pallas compiles them; cyclesim's optional
+    chaining discount reads them),
+
+driven by :class:`~repro.kvi.passes.pipeline.PassPipeline`, with
+register liveness (:mod:`~repro.kvi.passes.liveness`) shared with the
+linear-scan SPM allocator in ``repro.kvi.lowering``.
+
+Every pass is semantics-preserving: bit-identical outputs on every
+backend, enforced by the differential fuzz tests.
+"""
+from repro.kvi.passes.copy_prop import copy_prop
+from repro.kvi.passes.dce import dce
+from repro.kvi.passes.fusion import (FusedRegion, FusionPlan, MAX_FUSED_INPUTS,
+                                     MAX_FUSED_OPS, META_KEY, fuse_regions,
+                                     plan_fusion_regions)
+from repro.kvi.passes.liveness import (observable_items, peak_live_bytes,
+                                       reg_intervals, total_vreg_bytes)
+from repro.kvi.passes.pipeline import (DEFAULT_PASSES, REGISTERED_PASSES,
+                                       PassPipeline, default_pipeline,
+                                       optimize_program)
+
+__all__ = [
+    "copy_prop", "dce", "fuse_regions", "plan_fusion_regions",
+    "FusedRegion", "FusionPlan", "MAX_FUSED_OPS", "MAX_FUSED_INPUTS",
+    "META_KEY", "observable_items", "peak_live_bytes", "reg_intervals",
+    "total_vreg_bytes", "PassPipeline", "DEFAULT_PASSES",
+    "REGISTERED_PASSES", "default_pipeline", "optimize_program",
+]

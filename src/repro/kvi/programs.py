@@ -245,3 +245,49 @@ def fft_program(x_re: np.ndarray, x_im: np.ndarray) -> KviProgram:
 def fft_result(res: BackendResult) -> np.ndarray:
     return (res.outputs["out_re"].astype(np.float64) +
             1j * res.outputs["out_im"].astype(np.float64))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stress kernel: the shape of naively-generated code — staged
+# element-wise chains stitched with whole-register kvcp moves (fusion
+# breakers) and speculative products nothing consumes (dead code). The
+# optimizing pass pipeline collapses it to one fused chain; used by
+# benchmarks/bench_kvi_passes.py and the pass tests.
+# ---------------------------------------------------------------------------
+
+
+def pipeline_demo_program(x: np.ndarray, stages: int = 4) -> KviProgram:
+    """``stages`` rounds of ``t = relu(3 * (v + v)); v = copy(t)`` plus a
+    dead ``t * t`` per round. Unoptimized: every ``kvcp`` cuts the
+    element-wise chain (one extra fused kernel launch per stage on the
+    Pallas backend, an SPM copy on the hardware model) and the dead
+    products burn MFU cycles. Optimized: one fused region, no copies, no
+    dead work — bit-identical outputs."""
+    n = int(x.size)
+    b = KviProgramBuilder(f"pipeline_demo{n}x{stages}")
+    hx = b.mem_in("x", x.astype(np.int32))
+    v = b.vreg("v0", n)
+    b.scalar(10)                                  # kernel prologue
+    b.kmemld(v, hx)
+    for s in range(stages):
+        b.scalar(4)                               # stage bookkeeping
+        t = b.vreg(f"t{s}", n)
+        b.kaddv(t, v, v)
+        b.ksvmulsc(t, t, scalar=3)
+        b.krelu(t, t)
+        dead = b.vreg(f"dead{s}", n)
+        b.kvmul(dead, t, t)                       # never observed
+        nv = b.vreg(f"v{s + 1}", n)
+        b.kvcp(nv, t)                             # full-register move
+        v = nv
+    hy = b.mem_out("y", n)
+    b.kmemstr(hy, v)
+    return b.build(alg_ops=3 * n * stages, kind="pipeline_demo",
+                   n=n, stages=stages)
+
+
+def pipeline_demo_oracle(x: np.ndarray, stages: int = 4) -> np.ndarray:
+    v = x.astype(np.int64)
+    for _ in range(stages):
+        v = np.maximum((v + v) * 3, 0)
+    return v.astype(np.int32)

@@ -99,15 +99,20 @@ class HartScheduler:
         and ``start_est`` record the placement."""
         if not self.queue:
             raise ValueError("nothing queued")
-        # (accumulated_cycles, hart) min-heap = the free list ordered by
-        # when each hart frees up; hart index breaks ties (harc priority)
-        loads = [(0, h) for h in range(self.n_harts)]
+        # (accumulated_cycles, seq, hart) min-heap = the free list ordered
+        # by when each hart frees up. ``seq`` is a monotonic push counter:
+        # under EQUAL finish times the hart that became free earliest (in
+        # submission order of the work that freed it) wins — a stable,
+        # deterministic tie-break instead of an arbitrary hart-index race.
+        # Initially seq == hart index, so an empty machine fills 0,1,2,...
+        loads = [(0, h, h) for h in range(self.n_harts)]
         heapq.heapify(loads)
+        seq = itertools.count(self.n_harts)
         entries = []
         for t in self.queue:
-            load, h = heapq.heappop(loads)
+            load, _, h = heapq.heappop(loads)
             t.hart, t.start_est = h, load
-            heapq.heappush(loads, (load + t.est_cycles, h))
+            heapq.heappush(loads, (load + t.est_cycles, next(seq), h))
             entries.append(WorkloadEntry(t.program, HartAssignment(h)))
         self.dispatched.extend(self.queue)
         self.queue = []

@@ -131,6 +131,30 @@ class KviWorkload:
         return cls(name, tuple(entries))
 
     # ---- structure ------------------------------------------------------
+    def map_programs(self, fn) -> "KviWorkload":
+        """A workload with each entry's program replaced by
+        ``fn(program)``; assignments and meta are preserved. ``fn`` runs
+        once per distinct program OBJECT, so entries sharing a program
+        keep sharing the mapped one (identity-keyed caches downstream —
+        dedup, lowering — stay effective). Returns ``self`` when ``fn``
+        is an identity on every entry (the no-op-pass fast path)."""
+        cache: Dict[int, KviProgram] = {}
+        entries = []
+        changed = False
+        for e in self.entries:
+            mapped = cache.get(id(e.program))
+            if mapped is None:
+                mapped = fn(e.program)
+                cache[id(e.program)] = mapped
+            if mapped is e.program:
+                entries.append(e)
+            else:
+                changed = True
+                entries.append(WorkloadEntry(mapped, e.assignment))
+        if not changed:
+            return self
+        return KviWorkload(self.name, tuple(entries), dict(self.meta))
+
     @property
     def programs(self) -> Tuple[KviProgram, ...]:
         return tuple(e.program for e in self.entries)

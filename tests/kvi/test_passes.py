@@ -1,0 +1,486 @@
+"""Pass-pipeline tests: liveness, dce, copy_prop, fusion planning,
+liveness-based SPM allocation, the chaining discount, and the
+differential fuzz bar.
+
+The acceptance criteria for the optimizing-pass refactor:
+  * every pass combination x {oracle, cyclesim, pallas} produces
+    bit-identical outputs to the UNOPTIMIZED oracle (fuzzed),
+  * a program whose total vreg footprint exceeds the SPM but whose
+    peak-live footprint fits lowers and runs on all three backends,
+  * genuine overflow raises SpmOverflowError naming the program, its
+    peak-live bytes and the capacity,
+  * with the pipeline on, at least one backend gets measurably cheaper
+    (fewer pallas_calls / fewer cycles) at identical outputs.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.base import KlessydraConfig
+from repro.kvi import (KviProgramBuilder, KviWorkload, SpmOverflowError,
+                       get_backend, optimize_program)
+from repro.kvi.cyclesim import CycleSimBackend, default_schemes
+from repro.kvi.lowering import allocate_vregs, lower
+from repro.kvi.passes import (DEFAULT_PASSES, PassPipeline, copy_prop, dce,
+                              default_pipeline, fuse_regions,
+                              observable_items, peak_live_bytes,
+                              plan_fusion_regions, reg_intervals,
+                              total_vreg_bytes)
+from repro.kvi.programs import (conv2d_program, pipeline_demo_oracle,
+                                pipeline_demo_program)
+
+BACKENDS = ("oracle", "cyclesim", "pallas")
+
+
+def _saxpy(n=16, scalar=3, seed=0):
+    x = np.random.default_rng(seed).integers(-100, 100, n).astype(np.int32)
+    b = KviProgramBuilder("saxpy")
+    v = b.vreg("v", n)
+    b.kmemld(v, b.mem_in("x", x))
+    b.ksvmulsc(v, v, scalar=scalar)
+    b.krelu(v, v)
+    b.kmemstr(b.mem_out("y", n), v)
+    return b.build(), np.maximum(x * scalar, 0).astype(np.int32)
+
+
+class TestLiveness:
+    def test_reg_intervals_and_peak(self):
+        n = 8
+        b = KviProgramBuilder("seq")
+        hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+        a = b.vreg("a", n)
+        c = b.vreg("c", n)
+        b.kmemld(a, hx)                       # item 0: a born
+        b.ksvaddsc(a, a, scalar=1)            # item 1
+        b.kvcp(c, a)                          # item 2: a dies, c born
+        b.ksvmulsc(c, c, scalar=2)            # item 3
+        b.kmemstr(b.mem_out("y", n), c)       # item 4: c dies
+        p = b.build()
+        iv = reg_intervals(p)
+        assert iv[a.id] == (0, 2)
+        assert iv[c.id] == (2, 4)
+        # a and c overlap only at item 2 -> peak is both alive once
+        assert peak_live_bytes(p, align=4) == 2 * n * 4
+        assert total_vreg_bytes(p, align=4) == 2 * n * 4
+
+    def test_observable_items_flags_dead_tail(self):
+        p, _ = _saxpy()
+        b = KviProgramBuilder("dead_tail")
+        hx = b.mem_in("x", np.arange(8, dtype=np.int32))
+        v = b.vreg("v", 8)
+        d = b.vreg("d", 8)
+        b.kmemld(v, hx)
+        b.kaddv(d, v, v)                      # dead: d never observed
+        b.kmemstr(b.mem_out("y", 8), v)
+        prog = b.build()
+        assert observable_items(p) == [True] * len(p.items)
+        flags = observable_items(prog)
+        assert flags == [True, False, True]
+
+
+class TestDce:
+    def test_drops_dead_instrs_and_vregs(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(-100, 100, 16).astype(np.int32)
+        p = pipeline_demo_program(x, stages=3)
+        after_cp = copy_prop(p)
+        opt = dce(after_cp)
+        # 3 dead kvmul products + 3 bypassed kvcp moves are gone
+        assert opt.n_instructions == p.n_instructions - 6
+        # dead/stranded vregs removed and survivors renumbered densely
+        assert len(opt.vregs) < len(p.vregs)
+        assert [r.id for r in opt.vregs] == list(range(len(opt.vregs)))
+        out = get_backend("oracle", passes=()).run(opt).outputs["y"]
+        assert np.array_equal(out, pipeline_demo_oracle(x, 3))
+
+    def test_store_to_scratch_buffer_is_dead_unless_reloaded(self):
+        def build(reload_it):
+            b = KviProgramBuilder("scratch")
+            n = 8
+            hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+            hs = b.mem_in("scratch", np.zeros(n, np.int32))
+            v = b.vreg("v", n)
+            b.kmemld(v, hx)
+            b.ksvaddsc(v, v, scalar=5)
+            b.kmemstr(hs, v)                  # store to non-output buffer
+            if reload_it:
+                w = b.vreg("w", n)
+                b.kmemld(w, hs)
+                b.kmemstr(b.mem_out("y", n), w)
+            else:
+                b.kmemstr(b.mem_out("y", n), v)
+            return b.build()
+
+        dead = dce(build(reload_it=False))
+        live = dce(build(reload_it=True))
+        assert dead.n_instructions == build(False).n_instructions - 1
+        assert live.n_instructions == build(True).n_instructions
+        want = np.arange(8, dtype=np.int32) + 5
+        for prog in (dead, live):
+            out = get_backend("oracle", passes=()).run(prog).outputs["y"]
+            assert np.array_equal(out, want)
+
+    def test_noop_returns_same_object(self):
+        p, _ = _saxpy()
+        assert dce(p) is p
+
+    def test_partial_kmemld_does_not_kill_prior_writes(self):
+        """Regression: a kmemld into a sub-window writes exactly the
+        buffer's elements — liveness must not treat it as a full-register
+        def (which would let dce drop an earlier write to the rest of
+        the register). The builder also rejects a declared length that
+        overstates the buffer."""
+        n = 8
+        b = KviProgramBuilder("partial_ld")
+        hw = b.mem_in("w", np.full(4, 9, np.int32))
+        hx = b.mem_in("x", np.array([1, 2, 3, 4], np.int32))
+        w = b.vreg("w", 4)
+        v = b.vreg("v", n)
+        b.kmemld(w, hw)
+        b.kvcp(v.view(4, 4), w)          # writes v[4:8]
+        b.kmemld(v.view(0, 4), hx)       # writes v[0:4] ONLY
+        b.kaddv(v, v, v)
+        b.kmemstr(b.mem_out("y", n), v)
+        prog = b.build()
+        assert observable_items(prog) == [True] * len(prog.items)
+        want = np.array([2, 4, 6, 8, 18, 18, 18, 18], np.int32)
+        for name in BACKENDS:
+            for passes in ((), None):
+                out = get_backend(name, passes=passes).run(prog)
+                assert np.array_equal(out.outputs["y"], want), \
+                    (name, passes)
+        # overstating the transfer length is rejected at build time
+        with pytest.raises(ValueError, match="exceeds buffer"):
+            b2 = KviProgramBuilder("bad")
+            h = b2.mem_in("b4", np.arange(4, dtype=np.int32))
+            r = b2.vreg("r", n)
+            b2.kmemld(r, h, length=n)
+
+
+class TestCopyProp:
+    def test_full_register_copy_chain_bypassed(self):
+        rng = np.random.default_rng(2)
+        x = rng.integers(-100, 100, 16).astype(np.int32)
+        p = pipeline_demo_program(x, stages=4)
+        opt = optimize_program(p)
+        # no kvcp survives the full pipeline; one maximal fused region
+        assert all(i.op.value != "kvcp" for i in opt.items
+                   if hasattr(i, "op"))
+        plan = opt.meta["fused_regions"]
+        assert len(plan.regions) == 1
+        out = get_backend("oracle", passes=()).run(opt).outputs["y"]
+        assert np.array_equal(out, pipeline_demo_oracle(x, 4))
+
+    def test_partial_copies_untouched(self):
+        # bit-reversal-style single-element moves must survive
+        n = 8
+        b = KviProgramBuilder("partial")
+        hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+        v = b.vreg("v", n)
+        o = b.vreg("o", n)
+        b.kmemld(v, hx)
+        for i in range(n):
+            b.kvcp(o[n - 1 - i], v[i])
+        b.kmemstr(b.mem_out("y", n), o)
+        p = b.build()
+        assert copy_prop(p) is p
+        out = get_backend("pallas").run(p).outputs["y"]
+        assert np.array_equal(out, np.arange(n, dtype=np.int32)[::-1])
+
+    def test_pallas_call_count_drops(self):
+        from repro.kvi.pallas_backend import PallasBackend
+        x = np.arange(-32, 32, dtype=np.int32)
+        p = pipeline_demo_program(x, stages=4)
+        off = PallasBackend(passes=())
+        r_off = off.run(p)
+        on = PallasBackend()
+        r_on = on.run(p)
+        assert np.array_equal(r_off.outputs["y"], r_on.outputs["y"])
+        assert on.fused_calls < off.fused_calls
+        assert on.fused_calls == 1
+
+
+class TestFusionPlan:
+    def test_single_region_covers_chain(self):
+        p, _ = _saxpy()
+        plan = plan_fusion_regions(p)
+        assert len(plan.regions) == 1
+        r = plan.regions[0]
+        assert [p.items[i].op.value for i in r.items] == \
+            ["ksvmulsc", "krelu"]
+        assert r.n_slots == 1            # in-place chain: one window
+
+    def test_overlap_hazard_splits_region(self):
+        n = 8
+        b = KviProgramBuilder("hazard")
+        hx = b.mem_in("x", np.arange(2 * n, dtype=np.int32))
+        v = b.vreg("v", 2 * n)
+        b.kmemld(v, hx)
+        b.ksvaddsc(v[:n], v[:n], scalar=1)
+        # reads a window overlapping the pending write -> new region
+        b.ksvmulsc(v[n // 2:n // 2 + n], v[n // 2:n // 2 + n], scalar=2)
+        b.kmemstr(b.mem_out("y", 2 * n), v)
+        plan = plan_fusion_regions(b.build())
+        assert len(plan.regions) == 2
+
+    def test_max_ops_bound_respected(self):
+        n = 8
+        b = KviProgramBuilder("long")
+        hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+        v = b.vreg("v", n)
+        b.kmemld(v, hx)
+        for _ in range(10):
+            b.ksvaddsc(v, v, scalar=1)
+        b.kmemstr(b.mem_out("y", n), v)
+        plan = plan_fusion_regions(b.build(), max_ops=4)
+        assert [len(r.ops) for r in plan.regions] == [4, 4, 2]
+        assert plan.max_ops == 4
+
+
+def _oversubscribed_program(n_stages=8, n=256):
+    """Total vreg footprint n_stages x n x 4 B; peak-live footprint ONE
+    stage (each stage's register dies before the next is born)."""
+    b = KviProgramBuilder("oversubscribed")
+    rng = np.random.default_rng(7)
+    want = {}
+    for s in range(n_stages):
+        x = rng.integers(-1000, 1000, n).astype(np.int32)
+        h = b.mem_in(f"x{s}", x)
+        r = b.vreg(f"r{s}", n)
+        b.kmemld(r, h)
+        b.ksvaddsc(r, r, scalar=s)
+        b.kmemstr(b.mem_out(f"y{s}", n), r)
+        want[f"y{s}"] = x + s
+    return b.build(), want
+
+
+class TestSpmAllocation:
+    # 4 SPMs x 1 KiB = 4096 B capacity; line = D*4 = 16 B
+    CFG = KlessydraConfig("tiny", M=1, F=1, D=4, spm_kbytes=1)
+
+    def test_peak_live_fits_but_total_does_not(self):
+        prog, want = _oversubscribed_program()
+        cap = self.CFG.N * self.CFG.spm_kbytes * 1024
+        assert total_vreg_bytes(prog, 16) == 8 * 1024 > cap
+        assert peak_live_bytes(prog, 16) == 1024 <= cap
+        trace = lower(prog, self.CFG)
+        # dead registers' lines are reused: all eight live at address 0
+        assert set(trace.vreg_addr.values()) == {0}
+        out = trace.execute()
+        for k, v in want.items():
+            assert np.array_equal(out[k], v), k
+
+    def test_runs_on_all_three_backends(self):
+        prog, want = _oversubscribed_program()
+        schemes = default_schemes(D=4, spm_kbytes=1)
+        results = {
+            "oracle": get_backend("oracle").run(prog),
+            "cyclesim": CycleSimBackend(schemes=schemes).run(prog),
+            "pallas": get_backend("pallas").run(prog),
+        }
+        for name, res in results.items():
+            for k, v in want.items():
+                assert np.array_equal(res.outputs[k], v), (name, k)
+
+    def test_overlapping_lives_do_not_share_lines(self):
+        n = 64
+        b = KviProgramBuilder("overlap")
+        hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+        a = b.vreg("a", n)
+        c = b.vreg("c", n)
+        b.kmemld(a, hx)
+        b.kvcp(c, a)
+        b.kaddv(c, c, a)                 # a and c simultaneously live
+        b.kmemstr(b.mem_out("y", n), c)
+        addr = allocate_vregs(b.build(), self.CFG)
+        assert addr[a.id] != addr[c.id]
+
+    def test_uninitialized_read_sees_zeros_on_every_backend(self):
+        """Regression: a register read before any write must NOT inherit
+        another register's recycled SPM lines — every backend agrees its
+        elements are zeros (the pre-reuse semantics)."""
+        n = 64
+        b = KviProgramBuilder("uninit")
+        hx = b.mem_in("x", np.arange(1, n + 1, dtype=np.int32))
+        a = b.vreg("a", n)
+        u = b.vreg("u", n)               # never written
+        b.kmemld(a, hx)
+        b.kmemstr(b.mem_out("y1", n), a)  # a dies here
+        b.kmemstr(b.mem_out("y2", n), u)  # u born as a raw READ
+        prog = b.build()
+        iv = reg_intervals(prog, pin_uninitialized=True)
+        assert iv[u.id][0] == 0          # pinned: cannot reuse a's lines
+        addr = allocate_vregs(prog, self.CFG)
+        assert addr[a.id] != addr[u.id]
+        for name in BACKENDS:
+            res = get_backend(name, passes=()).run(prog)
+            assert np.array_equal(res.outputs["y2"],
+                                  np.zeros(n, np.int32)), name
+
+    def test_partial_first_write_pins_register(self):
+        # writing one element then reading the whole register must not
+        # expose recycled bytes in the untouched elements
+        n = 16
+        b = KviProgramBuilder("partial_first")
+        hx = b.mem_in("x", np.full(n, 7, np.int32))
+        a = b.vreg("a", n)
+        p = b.vreg("p", n)
+        b.kmemld(a, hx)
+        b.kvred(p[0], a)                 # p born by a 1-element write
+        b.kmemstr(b.mem_out("y", n), p)
+        prog = b.build()
+        iv = reg_intervals(prog, pin_uninitialized=True)
+        assert iv[p.id][0] == 0
+        want = np.zeros(n, np.int32)
+        want[0] = 7 * n
+        for name in BACKENDS:
+            out = get_backend(name, passes=()).run(prog).outputs["y"]
+            assert np.array_equal(out, want), name
+
+    def test_overflow_raises_dedicated_error(self):
+        n = 600                          # 2400 B each; two live > 4096 B
+        b = KviProgramBuilder("too_big")
+        hx = b.mem_in("x", np.arange(n, dtype=np.int32))
+        a = b.vreg("a", n)
+        c = b.vreg("c", n)
+        b.kmemld(a, hx)
+        b.kvcp(c, a)
+        b.kaddv(c, c, a)
+        b.kmemstr(b.mem_out("y", n), c)
+        prog = b.build()
+        with pytest.raises(SpmOverflowError) as ei:
+            lower(prog, self.CFG)
+        err = ei.value
+        assert err.program_name == "too_big"
+        assert err.peak_live_bytes == 2 * 2400
+        assert err.capacity_bytes == 4096
+        for needle in ("too_big", "4800", "4096"):
+            assert needle in str(err)
+        # the same error surfaces through the backend protocol
+        with pytest.raises(SpmOverflowError):
+            CycleSimBackend(
+                schemes={"tiny": self.CFG}).run(prog)
+
+
+class TestChainingDiscount:
+    def test_chaining_reduces_cycles_preserves_semantics(self, rng):
+        img = rng.integers(-128, 128, (8, 8)).astype(np.int32)
+        filt = rng.integers(-8, 8, (3, 3)).astype(np.int32)
+        prog = conv2d_program(img, filt, shift=4)
+        off = CycleSimBackend().run(prog)
+        on = CycleSimBackend(chaining=True).run(prog)
+        for k in off.outputs:
+            assert np.array_equal(off.outputs[k], on.outputs[k])
+        assert all(on.cycles[s] < off.cycles[s] for s in off.cycles)
+        c = on.cycles
+        assert c["sym_mimd"] <= c["het_mimd"] <= c["shared"], c
+
+    def test_chaining_needs_fusion_plan(self):
+        p, want = _saxpy()
+        off = CycleSimBackend(passes=()).run(p)
+        on_no_plan = CycleSimBackend(passes=(), chaining=True).run(p)
+        assert on_no_plan.cycles == off.cycles
+        assert np.array_equal(on_no_plan.outputs["y"], want)
+
+
+class TestPipelineApi:
+    def test_escape_hatch_and_specs(self):
+        p, want = _saxpy()
+        assert not PassPipeline.from_spec(())
+        assert PassPipeline.from_spec(None).names == DEFAULT_PASSES
+        assert PassPipeline.from_spec("dce").run(p) is p
+        with pytest.raises(KeyError, match="unknown pass"):
+            PassPipeline.from_spec(("nope",))
+        out = get_backend("oracle", passes=("copy_prop", dce)).run(p)
+        assert np.array_equal(out.outputs["y"], want)
+
+    def test_item_rewriting_passes_invalidate_stale_plan(self):
+        """Regression: fuse_regions BEFORE copy_prop/dce must not leave a
+        stale plan (shifted item indices, remapped vreg ids) for the
+        Pallas backend to execute."""
+        x = np.arange(-16, 16, dtype=np.int32)
+        p = pipeline_demo_program(x, stages=3)
+        weird = ("fuse_regions", "copy_prop", "dce")
+        opt = optimize_program(p, weird)
+        assert "fused_regions" not in opt.meta
+        for name in BACKENDS:
+            out = get_backend(name, passes=weird).run(p).outputs["y"]
+            assert np.array_equal(out, pipeline_demo_oracle(x, 3)), name
+
+    def test_workload_keeps_shared_program_objects(self):
+        p, _ = _saxpy()
+        wl = KviWorkload.replicate(p, 3)
+        opt = get_backend("oracle").optimize_workload(wl)
+        assert len({id(e.program) for e in opt.entries}) == 1
+
+    def test_default_pipeline_attaches_plan_only_when_fusable(self):
+        p, _ = _saxpy()
+        opt = default_pipeline().run(p)
+        assert "fused_regions" in opt.meta
+        b = KviProgramBuilder("memonly")
+        hx = b.mem_in("x", np.arange(4, dtype=np.int32))
+        v = b.vreg("v", 4)
+        b.kmemld(v, hx)
+        b.kmemstr(b.mem_out("y", 4), v)
+        memonly = b.build()
+        assert default_pipeline().run(memonly) is memonly
+
+
+# ---------------------------------------------------------------------------
+# Differential fuzz: random programs, every pass combination, every
+# backend, one ground truth — the unoptimized oracle.
+# ---------------------------------------------------------------------------
+
+PASS_COMBOS = [c for k in range(4)
+               for c in itertools.combinations(DEFAULT_PASSES, k)]
+
+EW = ["kaddv", "ksubv", "kvmul", "ksvaddsc", "ksvmulsc", "ksrav",
+      "krelu", "kvslt", "ksvslt", "kvcp", "kvred"]
+
+rand_op = st.tuples(st.sampled_from(EW), st.integers(0, 3),
+                    st.integers(0, 3), st.integers(0, 12))
+
+
+def _random_program(ops, seed, n=8):
+    """Straight-line program over 4 vregs with full-reg kvcp moves (for
+    copy_prop), reductions (rf_store spills), and only half the regs
+    stored (dead code for dce). Outputs o0/o1 are the observable truth."""
+    rng = np.random.default_rng(seed)
+    b = KviProgramBuilder("fuzz")
+    regs = []
+    for i in range(4):
+        h = b.mem_in(f"x{i}", rng.integers(-1000, 1000, n).astype(np.int32))
+        r = b.vreg(f"v{i}", n)
+        b.kmemld(r, h)
+        regs.append(r)
+    for op, d, s, imm in ops:
+        dst, src = regs[d], regs[s]
+        if op in ("kaddv", "ksubv", "kvmul", "kvslt"):
+            getattr(b, op)(dst, src, regs[(s + 1) % 4])
+        elif op == "kvcp":
+            b.kvcp(dst, src)
+        elif op == "krelu":
+            b.krelu(dst, src)
+        elif op == "kvred":
+            b.kvred(dst[imm % n], src)
+        else:
+            getattr(b, op)(dst, src, scalar=imm)
+    for i in range(2):                   # regs 2/3 stay unobserved
+        b.kmemstr(b.mem_out(f"o{i}", n), regs[i])
+    return b.build()
+
+
+@given(st.lists(rand_op, min_size=1, max_size=10),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_fuzz_every_pass_combo_every_backend(ops, seed):
+    prog = _random_program(ops, seed)
+    truth = get_backend("oracle", passes=()).run(prog).outputs
+    for combo in PASS_COMBOS:
+        for name in BACKENDS:
+            res = get_backend(name, passes=combo).run(prog)
+            for o in truth:
+                assert np.array_equal(res.outputs[o], truth[o]), \
+                    (name, combo, o)

@@ -275,6 +275,35 @@ class TestScheduler:
         assert [e.hart for e in wl.entries] == [0, 1, 1, 1, 1]
         assert sched.hart_loads == [100, 110]
 
+    def test_dispatch_deterministic_under_equal_finish_times(self):
+        """Regression: equal accumulated finish times tie-break on
+        submission order (the hart that became free EARLIEST wins), not
+        on an arbitrary hart-index race — and dispatch is reproducible
+        run to run."""
+        from repro.kvi.scheduler import HartScheduler
+
+        def build(i):
+            b = KviProgramBuilder(f"p{i}")
+            h = b.mem_in("x", np.ones(4, np.int32))
+            v = b.vreg("v", 4)
+            b.kmemld(v, h)
+            b.kmemstr(b.mem_out("y", 4), v)
+            return b.build()
+
+        costs = [2, 4, 2, 2, 2]
+
+        def placements():
+            sched = HartScheduler(
+                n_harts=2, estimator=lambda p: costs[int(p.name[1:])])
+            for i in range(len(costs)):
+                sched.submit(build(i))
+            return [e.hart for e in sched.dispatch().entries]
+
+        # p0->h0(2), p1->h1(4), p2->h0(now 4). p3 sees BOTH harts free at
+        # 4: h1 got there first (p1 was admitted before p2), so p3->h1.
+        assert placements() == [0, 1, 0, 1, 0]
+        assert placements() == placements()
+
     def test_scheduled_workload_executes(self, rng):
         from repro.kvi.scheduler import HartScheduler
         sched = HartScheduler(n_harts=3)
