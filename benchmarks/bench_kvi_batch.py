@@ -23,24 +23,25 @@ import time
 import numpy as np
 
 
-def _conv_instances(S: int, n_instances: int):
+def _conv_instances(S: int, n_instances: int, seed: int = 0):
     """N conv programs sharing ONE filter (weights are instruction
     immediates, so batchable instances must share them — the DNN-inference
     shape: one model, N inputs) over different images."""
     from repro.kvi.programs import conv2d_program
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     filt = rng.integers(-8, 8, (3, 3)).astype(np.int32)
     return [conv2d_program(
         rng.integers(-128, 128, (S, S)).astype(np.int32), filt, shift=4)
         for _ in range(n_instances)]
 
 
-def _pallas_batch_case(S: int, n_instances: int, emit) -> dict:
+def _pallas_batch_case(S: int, n_instances: int, emit,
+                       seed: int = 0) -> dict:
     from repro.kvi.pallas_backend import PallasBackend
     from repro.kvi.workload import KviWorkload
 
     kernel = f"conv{S}"
-    progs = _conv_instances(S, n_instances)
+    progs = _conv_instances(S, n_instances, seed)
 
     per = PallasBackend()
     t0 = time.perf_counter()
@@ -71,7 +72,7 @@ def _pallas_batch_case(S: int, n_instances: int, emit) -> dict:
     return row
 
 
-def run(emit) -> dict:
+def run(emit, seed: int = 0) -> dict:
     from benchmarks.paper_data import make_config
     from repro.core.workloads import composite_cycles
 
@@ -86,11 +87,12 @@ def run(emit) -> dict:
 
     emit("# --- pallas: batched vs per-program dispatch ---")
     pallas = [
-        _pallas_batch_case(8, 8, emit),
-        _pallas_batch_case(16, 8, emit),
+        _pallas_batch_case(8, 8, emit, seed),
+        _pallas_batch_case(16, 8, emit, seed),
     ]
 
-    out = {"cyclesim_composite": cyclesim, "pallas_batch": pallas,
+    out = {"seed": seed,
+           "cyclesim_composite": cyclesim, "pallas_batch": pallas,
            "checks": {
                "batched_fewer_dispatches": all(
                    row["batched_pallas_calls"] < row["per_program_pallas_calls"]
@@ -101,8 +103,10 @@ def run(emit) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_kvi_batch.json")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="program input-data seed (reproducible inputs)")
     args = ap.parse_args(argv)
-    result = run(emit=print)
+    result = run(emit=print, seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}")

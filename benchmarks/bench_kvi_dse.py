@@ -1,0 +1,55 @@
+"""Design-space exploration benchmark: the full sweep -> Pareto story.
+
+Runs :func:`repro.kvi.dse.report.run_dse` (schemes x lanes x sub-word
+precision over the paper's conv / fft / matmul kernels plus the
+composite workload) and emits ``BENCH_kvi_dse.json`` — per-point cycles
+/ area / energy, per-kernel Pareto fronts and speedup-vs-D curves, and
+the acceptance checks (sym-MIMD fastest, shared cheapest, het-MIMD on
+the front between them; 8-bit >= 2x on the MFU-bound kernels).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_kvi_dse [--smoke]
+          [--seed N] [--out PATH]
+or through the harness:  python -m benchmarks.run --only kvi_dse
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def run(emit, smoke: bool = False, seed: int = 0) -> dict:
+    from repro.kvi.dse.report import run_dse
+    result, report = run_dse(smoke=smoke, seed=seed, emit=emit)
+    emit("# --- checks ---")
+    for k, v in report["checks"].items():
+        emit(f"{k} = {v}")
+    for kern, data in report["kernels"].items():
+        emit(f"{kern}: front={len(data['front'])} points, "
+             f"subword_max={data['subword']['max_speedup']}x")
+    # compact per-point rows ride along for the perf trajectory
+    report["points"] = result.csv_rows()
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kvi_dse.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small kernels + default axes (CI fast job)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="kernel input data seed (reproducible inputs)")
+    args = ap.parse_args(argv)
+    result = run(emit=print, smoke=args.smoke, seed=args.seed)
+    checks = result["checks"]
+    assert checks["all_schemes_covered"], "a scheme produced no points"
+    assert checks["pareto_ordering_ok"], "paper scheme ordering broken"
+    assert checks["subword_2x_on_mfu_bound"], "sub-word speedup < 2x"
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

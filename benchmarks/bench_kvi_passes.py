@@ -29,12 +29,12 @@ import time
 import numpy as np
 
 
-def _program_set(S: int, n_fft: int, m: int, stages: int):
+def _program_set(S: int, n_fft: int, m: int, stages: int, seed: int = 0):
     """(name, program) pairs: the paper's three kernels + the pipeline
     stress kernel."""
     from repro.kvi.programs import (conv2d_program, fft_program,
                                     matmul_program, pipeline_demo_program)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     filt = rng.integers(-8, 8, (3, 3)).astype(np.int32)
     img = rng.integers(-128, 128, (S, S)).astype(np.int32)
     A = rng.integers(-64, 64, (m, m)).astype(np.int32)
@@ -51,17 +51,17 @@ def _program_set(S: int, n_fft: int, m: int, stages: int):
     ]
 
 
-def _cyclesim_set(smoke: bool):
+def _cyclesim_set(smoke: bool, seed: int = 0):
     """Paper fig2/table2 sizes — the event-driven simulator is cheap."""
-    return (_program_set(S=8, n_fft=32, m=8, stages=2) if smoke
-            else _program_set(S=32, n_fft=256, m=64, stages=6))
+    return (_program_set(S=8, n_fft=32, m=8, stages=2, seed=seed) if smoke
+            else _program_set(S=32, n_fft=256, m=64, stages=6, seed=seed))
 
 
-def _pallas_set(smoke: bool):
+def _pallas_set(smoke: bool, seed: int = 0):
     """Interpret-mode-friendly sizes (CPU interpret wall time would
     otherwise dwarf the compile-count signal being measured)."""
-    return (_program_set(S=8, n_fft=32, m=8, stages=2) if smoke
-            else _program_set(S=16, n_fft=64, m=8, stages=6))
+    return (_program_set(S=8, n_fft=32, m=8, stages=2, seed=seed) if smoke
+            else _program_set(S=16, n_fft=64, m=8, stages=6, seed=seed))
 
 
 def _outputs_equal(a, b) -> bool:
@@ -113,9 +113,9 @@ def _pallas_case(name, prog, emit) -> dict:
     return row
 
 
-def run(emit, smoke: bool = False) -> dict:
+def run(emit, smoke: bool = False, seed: int = 0) -> dict:
     from repro.kvi.passes import default_pipeline
-    cs_progs = _cyclesim_set(smoke)
+    cs_progs = _cyclesim_set(smoke, seed)
 
     emit("# --- pass pipeline: instruction-count deltas ---")
     pipe = default_pipeline()
@@ -138,10 +138,12 @@ def run(emit, smoke: bool = False) -> dict:
 
     emit("# --- pallas: passes off vs on ---")
     _pallas_warmup()
-    pallas = [_pallas_case(n, p, emit) for n, p in _pallas_set(smoke)]
+    pallas = [_pallas_case(n, p, emit)
+              for n, p in _pallas_set(smoke, seed)]
 
     out = {
         "smoke": smoke,
+        "seed": seed,
         "programs": programs_rows,
         "cyclesim": cyclesim,
         "pallas": pallas,
@@ -163,8 +165,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_kvi_passes.json")
     ap.add_argument("--smoke", action="store_true",
                     help="small program sizes (CI fast job)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="program input-data seed (reproducible inputs)")
     args = ap.parse_args(argv)
-    result = run(emit=print, smoke=args.smoke)
+    result = run(emit=print, smoke=args.smoke, seed=args.seed)
     assert result["checks"]["cyclesim_reduced"], "no cyclesim win"
     assert result["checks"]["pallas_calls_reduced"], "no pallas win"
     with open(args.out, "w") as f:

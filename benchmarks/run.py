@@ -1,14 +1,20 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only table2,fig2,...]
+                                          [--seed N]
 
 Prints each benchmark's detailed report, then a final
 ``name,us_per_call,derived`` CSV summary (us_per_call = harness wall time
 per benchmark; derived = that benchmark's headline check).
+
+``--seed`` is forwarded to every benchmark whose ``run()`` accepts a
+``seed`` keyword, so the randomized inputs behind the BENCH_*.json
+artifacts are reproducible run-to-run.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -17,12 +23,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
-                         "roofline,kvi_batch,kvi_passes")
+                         "roofline,kvi_batch,kvi_passes,kvi_dse")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="input-data seed for seed-aware benchmarks")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_kvi_batch, bench_kvi_passes, fig2_dlp_tlp,
-                            fig3_exec_time, fig4_energy, kernel_micro,
-                            roofline_report, table2_cycles, table3_filters)
+    from benchmarks import (bench_kvi_batch, bench_kvi_dse, bench_kvi_passes,
+                            fig2_dlp_tlp, fig3_exec_time, fig4_energy,
+                            kernel_micro, roofline_report, table2_cycles,
+                            table3_filters)
     benches = {
         "table2": (table2_cycles,
                    lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
@@ -45,6 +54,11 @@ def main(argv=None) -> int:
                        f"{r['checks']['cyclesim_reduced']},"
                        "pallas_calls_reduced="
                        f"{r['checks']['pallas_calls_reduced']}"),
+        "kvi_dse": (bench_kvi_dse,
+                    lambda r: "pareto_ordering_ok="
+                    f"{r['checks']['pareto_ordering_ok']},"
+                    "subword_2x="
+                    f"{r['checks']['subword_2x_on_mfu_bound']}"),
     }
     only = [s for s in args.only.split(",") if s]
     rows = []
@@ -54,7 +68,10 @@ def main(argv=None) -> int:
         print(f"\n================ {name} ================", flush=True)
         t0 = time.perf_counter()
         try:
-            result = mod.run(emit=print)
+            kwargs = {}
+            if "seed" in inspect.signature(mod.run).parameters:
+                kwargs["seed"] = args.seed
+            result = mod.run(emit=print, **kwargs)
             derived = derive(result)
         except Exception as e:  # noqa: BLE001 — report but keep harness alive
             derived = f"ERROR:{type(e).__name__}:{e}"

@@ -109,7 +109,8 @@ class Scalar:
     engine: str = "none"
 
 
-def mfu_cycles(instr: Instr, D: int, setup: int) -> Tuple[int, int]:
+def mfu_cycles(instr: Instr, D: int, setup: int,
+               min_elem_bytes: int = 1) -> Tuple[int, int]:
     """(unit_cycles, spmi_cycles) for one vector op.
 
     * SPMI streaming: one SPM line (D banks) per cycle PER VECTOR SOURCE —
@@ -122,8 +123,13 @@ def mfu_cycles(instr: Instr, D: int, setup: int) -> Tuple[int, int]:
       units, per-hart SPMIs) stays within 1-7% of symmetric MIMD in the
       paper: the SPMI streaming, not the unit, is the real bottleneck.
 
-    Sub-word SIMD: 8/16-bit elements pack more lanes per 32-bit bank."""
-    lanes = D * max(1, 4 // instr.elem_bytes)
+    Sub-word SIMD: 8/16-bit elements pack more lanes per 32-bit bank —
+    but only down to the hardware's narrowest supported lane width
+    (``min_elem_bytes`` = config.subword_bits/8). A datapath without
+    sub-word lanes (min_elem_bytes=4) streams narrow elements one per
+    bank, getting no packing benefit."""
+    eff_eb = max(instr.elem_bytes, min_elem_bytes)
+    lanes = D * max(1, 4 // eff_eb)
     n_src = max(int(instr.src1 is not None) + int(instr.src2 is not None), 1)
     lines = int(np.ceil(instr.length / max(lanes, 1)))
     return setup + lines, setup + n_src * lines

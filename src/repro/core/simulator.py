@@ -43,6 +43,28 @@ class HartStats:
     lsu_ops: int = 0
     spin_cycles: int = 0
     finish_cycle: int = 0
+    # cycle breakdown over the whole simulated window [0, total):
+    #   busy  — the hart is doing something (a coprocessor op of its own
+    #           is executing, or it is retiring a scalar issue slot),
+    #   stall — waiting to issue a coprocessor op (busy resource, slot
+    #           alignment) with nothing of its own in flight,
+    #   idle  — the remainder (finished early / unowned slots).
+    # Invariant: busy + stall + idle == total cycles (asserted in tests).
+    busy_cycles: int = 0
+    stall_cycles: int = 0
+    idle_cycles: int = 0
+
+    @property
+    def total_cycles(self) -> int:
+        return self.busy_cycles + self.stall_cycles + self.idle_cycles
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_cycles / max(self.total_cycles, 1)
+
+    def breakdown(self) -> Dict[str, int]:
+        return {"busy": self.busy_cycles, "stall": self.stall_cycles,
+                "idle": self.idle_cycles, "total": self.total_cycles}
 
 
 @dataclass
@@ -57,11 +79,48 @@ class SimResult:
     def mfu_utilization(self) -> float:
         return self.mfu_busy_cycles / max(self.cycles, 1)
 
+    @property
+    def hart_utilization(self) -> List[float]:
+        """Per-hart busy fraction of the whole workload window."""
+        return [h.utilization for h in self.per_hart]
+
 
 def _align_up(t: int, phase: int, period: int) -> int:
     """Smallest t' >= t with t' ≡ phase (mod period)."""
     r = (t - phase) % period
     return t if r == 0 else t + (period - r)
+
+
+def _merge_intervals(intervals: List[tuple]) -> List[tuple]:
+    """Sorted union of half-open [s, e) intervals."""
+    out: List[tuple] = []
+    for s, e in sorted(i for i in intervals if i[1] > i[0]):
+        if out and s <= out[-1][1]:
+            if e > out[-1][1]:
+                out[-1] = (out[-1][0], e)
+        else:
+            out.append((s, e))
+    return out
+
+
+def _length_outside(intervals: List[tuple], cover: List[tuple]) -> int:
+    """Total length of ``intervals`` (a merged list) not overlapped by
+    ``cover`` (another merged list)."""
+    total = 0
+    ci = 0
+    for s, e in intervals:
+        cur = s
+        while cur < e:
+            while ci < len(cover) and cover[ci][1] <= cur:
+                ci += 1
+            if ci == len(cover) or cover[ci][0] >= e:
+                total += e - cur
+                break
+            cs, ce = cover[ci]
+            if cs > cur:
+                total += cs - cur
+            cur = max(cur, min(ce, e))
+    return total
 
 
 class Simulator:
@@ -72,9 +131,12 @@ class Simulator:
         self.cfg = config
 
     def _resource_holds(self, hart: int, instr: Instr):
-        """[(resource_key, duration)] an op must acquire. Two resources per
-        MFU op: the SPMI stream (2 passes for 2-source ops) and the
-        functional unit (line-rate). Sharing depends on the scheme."""
+        """[(candidate_keys, duration)] an op must acquire — one key per
+        equivalent resource instance (the op takes whichever frees first).
+        Two resources per MFU op: the SPMI stream (2 passes for 2-source
+        ops) and the functional unit (line-rate). Sharing depends on the
+        scheme; ``fu_counts`` replicates internal units of the shared MFU
+        in the heterogeneous scheme."""
         cfg = self.cfg
         if instr.engine == "lsu":
             dur = lsu_cycles(instr, cfg.mem_port_bytes,
@@ -82,8 +144,9 @@ class Simulator:
             # single memory port; the bank interleaver routes the transfer
             # through the SPMI, so it contends with MFU streaming there
             spmi = ("spmi", 0) if cfg.M == 1 else ("spmi", hart)
-            return [(("lsu", 0), dur), (spmi, dur)]
-        unit_c, spmi_c = mfu_cycles(instr, cfg.D, cfg.vector_setup_cycles)
+            return [((("lsu", 0),), dur), ((spmi,), dur)]
+        unit_c, spmi_c = mfu_cycles(instr, cfg.D, cfg.vector_setup_cycles,
+                                    min_elem_bytes=cfg.subword_bits // 8)
         # FU chaining (repro.kvi.lowering, chaining=True): an op fed
         # directly by the previous op's result stream skips its startup
         # latency; plain traces carry no discount and are untouched
@@ -93,13 +156,18 @@ class Simulator:
             spmi_c = max(1, spmi_c - disc)
         if cfg.M == 1 and cfg.F == 1:
             # shared: one SPMI + one MFU for everyone; SPMI streaming binds
-            return [(("spmi", 0), spmi_c), (("unit", 0), unit_c)]
+            return [((("spmi", 0),), spmi_c), ((("unit", 0),), unit_c)]
         if cfg.F == cfg.M and cfg.F > 1:
             # symmetric MIMD: per-hart SPMI + per-hart MFU
-            return [(("spmi", hart), spmi_c), (("unit", hart), unit_c)]
-        # heterogeneous MIMD: per-hart SPMI, shared MFU per internal unit
-        return [(("spmi", hart), spmi_c),
-                (("unit", instr.unit.value), unit_c)]
+            return [((("spmi", hart),), spmi_c),
+                    ((("unit", hart),), unit_c)]
+        # heterogeneous MIMD: per-hart SPMI, F shared MFUs contended per
+        # internal unit — the instance pool is F MFUs x fu_count per
+        # unit (fu_counts > 1 replicates a unit inside each MFU)
+        uname = instr.unit.value
+        units = tuple(("unit", uname, k)
+                      for k in range(cfg.F * cfg.fu_count(uname)))
+        return [((("spmi", hart),), spmi_c), (units, unit_c)]
 
     def run(self, programs: Sequence[Sequence[Item]]) -> SimResult:
         cfg = self.cfg
@@ -121,6 +189,11 @@ class Simulator:
         def hart_items(h):
             return programs[h] if h < len(programs) else []
 
+        # per-hart activity/wait intervals for the busy/stall/idle
+        # breakdown (scalar slots are 1-cycle intervals at owned slots)
+        activity: List[List[tuple]] = [[] for _ in range(H)]
+        waits: List[List[tuple]] = [[] for _ in range(H)]
+
         remaining = sum(len(hart_items(h)) for h in range(H))
         while remaining > 0:
             # pick the hart that can act earliest (deterministic tie-break
@@ -135,8 +208,8 @@ class Simulator:
                 if isinstance(it, Instr):
                     # must wait for own previous coprocessor op
                     t = max(t, copro_ready[h])
-                    for k, _dur in self._resource_holds(h, it):
-                        t = max(t, busy_until.get(k, 0))
+                    for keys, _dur in self._resource_holds(h, it):
+                        t = max(t, min(busy_until.get(k, 0) for k in keys))
                     t = _align_up(t, h, H)
                 if best_t is None or t < best_t:
                     best_h, best_t = h, t
@@ -148,14 +221,20 @@ class Simulator:
                 # n scalar instructions, one per owned slot
                 end = t + (it.count - 1) * H + 1 if it.count else t
                 stats[h].instructions += it.count
+                for k in range(it.count):
+                    activity[h].append((t + k * H, t + k * H + 1))
                 next_slot[h] = _align_up(end, h, H)
                 finish[h] = max(finish[h], end)
             else:
                 stats[h].instructions += 1
                 stats[h].spin_cycles += max(0, t - next_slot[h])
+                waits[h].append((next_slot[h], t))
                 holds = self._resource_holds(h, it)
                 end = t
-                for k, dur in holds:
+                for keys, dur in holds:
+                    # take the instance that frees first (<= t by the
+                    # availability computation above)
+                    k = min(keys, key=lambda kk: busy_until.get(kk, 0))
                     busy_until[k] = t + dur
                     end = max(end, t + dur)
                 if it.engine == "lsu":
@@ -165,6 +244,7 @@ class Simulator:
                     stats[h].vector_ops += 1
                     mfu_busy += end - t
                 copro_ready[h] = end
+                activity[h].append((t, end))
                 # issuing takes one slot; hart continues with next instr
                 next_slot[h] = _align_up(t + 1, h, H)
                 finish[h] = max(finish[h], end)
@@ -174,6 +254,14 @@ class Simulator:
         total = max(finish) if finish else 0
         for h in range(H):
             stats[h].finish_cycle = finish[h]
+            busy_cover = _merge_intervals(activity[h])
+            busy = sum(e - s for s, e in busy_cover)
+            # stall = wait time not already covered by the hart's own
+            # in-flight work (waiting on your own previous op is busy)
+            stall = _length_outside(_merge_intervals(waits[h]), busy_cover)
+            stats[h].busy_cycles = busy
+            stats[h].stall_cycles = stall
+            stats[h].idle_cycles = total - busy - stall
         return SimResult(total, stats, mfu_busy, lsu_busy, cfg)
 
 

@@ -35,15 +35,14 @@ from repro.kvi.workload import (KviWorkload, WorkloadResult,
 
 def default_schemes(D: int = 4, spm_kbytes: int = 64,
                     ) -> Dict[str, KlessydraConfig]:
-    """The paper's three coprocessor schemes at one DLP width."""
-    return {
-        "shared": KlessydraConfig("shared", M=1, F=1, D=D,
-                                  spm_kbytes=spm_kbytes),
-        "sym_mimd": KlessydraConfig("sym_mimd", M=3, F=3, D=D,
-                                    spm_kbytes=spm_kbytes),
-        "het_mimd": KlessydraConfig("het_mimd", M=3, F=1, D=D,
-                                    spm_kbytes=spm_kbytes),
-    }
+    """The paper's three coprocessor schemes at one DLP width.
+
+    Scheme construction lives on the design-space subsystem
+    (:func:`repro.kvi.dse.space.scheme_config`) — this is the
+    D-parameterized slice of that space the single-config callers use."""
+    from repro.kvi.dse.space import SCHEMES, scheme_config
+    return {s: scheme_config(s, D=D, spm_kbytes=spm_kbytes)
+            for s in SCHEMES}
 
 
 @register_backend("cyclesim")

@@ -1,0 +1,40 @@
+"""repro.kvi.dse — design-space exploration over coprocessor configs.
+
+The paper's analysis, reproducible end to end:
+
+  1. :mod:`~repro.kvi.dse.space` — declare the grid (scheme x M x F x
+     D x sub-word precision x SPM capacity x pass toggles) as a
+     :class:`DesignSpace`; enumeration is deterministic and validated.
+  2. :mod:`~repro.kvi.dse.cost` — analytic LUT/FF/DSP/BRAM area and
+     energy-per-cycle for any :class:`KlessydraConfig` (one documented
+     calibration table).
+  3. :mod:`~repro.kvi.dse.sweep` — fan design points out through
+     ``CycleSimBackend.run_workload`` (homogeneous + composite
+     protocols), recording cycles, per-hart utilization, area, energy.
+  4. :mod:`~repro.kvi.dse.pareto` / :mod:`~repro.kvi.dse.report` —
+     non-dominated front over (cycles, area, energy), speedup-vs-D
+     curves, and the paper's scheme-ordering story as checks.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.kvi.dse --smoke   # CI-sized sweep
+    PYTHONPATH=src python -m repro.kvi.dse           # paper-scale sweep
+"""
+from repro.kvi.dse.cost import (CALIBRATION, HardwareCost, energy_model,
+                                hardware_cost)
+from repro.kvi.dse.pareto import dominates, front_metrics, pareto_front
+from repro.kvi.dse.report import (build_report, full_space, render_markdown,
+                                  run_dse, smoke_space)
+from repro.kvi.dse.space import (SCHEMES, DesignPoint, DesignSpace,
+                                 preflight_point, scheme_config)
+from repro.kvi.dse.sweep import (PointRecord, SweepResult,
+                                 paper_kernel_factory, run_point, sweep)
+
+__all__ = [
+    "CALIBRATION", "HardwareCost", "energy_model", "hardware_cost",
+    "dominates", "front_metrics", "pareto_front", "build_report",
+    "full_space", "render_markdown", "run_dse", "smoke_space", "SCHEMES",
+    "DesignPoint", "DesignSpace", "preflight_point", "scheme_config",
+    "PointRecord", "SweepResult",
+    "paper_kernel_factory", "run_point", "sweep",
+]

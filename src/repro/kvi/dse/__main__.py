@@ -1,0 +1,51 @@
+"""CLI: ``python -m repro.kvi.dse [--smoke] [--out-dir DIR] ...``
+
+Runs the design-space sweep over the paper's kernels, writes the
+artifacts (``dse_sweep.json``, ``dse_sweep.csv``, ``dse_report.md``,
+``BENCH_kvi_dse.json``) and exits non-zero when any acceptance check
+fails (all schemes covered, Pareto scheme ordering, sub-word >= 2x on
+the MFU-bound kernels).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.kvi.dse")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small kernels + default axes (CI-sized, <60s)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where to write sweep/report artifacts")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="kernel input data seed (reproducible BENCH)")
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="sweep thread-pool width")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-point progress lines")
+    args = ap.parse_args(argv)
+
+    from repro.kvi.dse.report import run_dse
+    emit = (lambda s: None) if args.quiet else print
+    result, report = run_dse(smoke=args.smoke, seed=args.seed,
+                             emit=emit, out_dir=args.out_dir,
+                             max_workers=args.jobs)
+
+    print(f"\n# swept {report['meta']['n_points']} points "
+          f"({report['meta']['n_ok']} ok) in "
+          f"{report['meta']['total_wall_s']}s")
+    failed = [k for k, v in report["checks"].items()
+              if isinstance(v, bool) and not v]
+    for k, v in report["checks"].items():
+        print(f"#   {k} = {v}")
+    print(f"# wrote dse_sweep.json / dse_sweep.csv / dse_report.md / "
+          f"BENCH_kvi_dse.json under {args.out_dir}")
+    if failed:
+        print(f"# FAILED checks: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

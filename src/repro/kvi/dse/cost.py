@@ -1,0 +1,181 @@
+"""Analytic hardware cost / energy model for one design point.
+
+FPGA-resource flavored (LUT / FF / DSP / BRAM, the paper synthesizes on
+a Xilinx Kintex-7), aggregated into one LUT-equivalent area scalar for
+Pareto analysis. The model is *relative*, not sign-off: the calibration
+constants below are chosen so the orderings the paper's synthesis tables
+establish hold —
+
+  * shared (M=1,F=1) is the cheapest scheme, symmetric MIMD (M=F=3) the
+    most expensive, heterogeneous MIMD (M=3,F=1) strictly between: SPMI
+    replication is cheaper than MFU replication;
+  * area grows with lane count D in every scheme (datapath + bank
+    interleaver width);
+  * sub-word SIMD support (subword_bits < 32) costs extra lane logic
+    (splitters, carry breaks, per-subword predication), so an 8-bit
+    design point pays area for its cycle advantage;
+  * energy-per-cycle at the operating point lands in the few-nJ range
+    of the paper's Table 3 (e.g. Sym MIMD D=8, 12k cycles, 29 uJ ->
+    ~2.4 nJ/cycle), with static power proportional to area — so faster
+    execution saves energy, the paper's ">85% energy saving" mechanism.
+
+Every constant lives in :data:`CALIBRATION` — one documented table, the
+single knob future synthesis-data calibration should touch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import MFU_UNITS, KlessydraConfig
+
+#: The calibration table. Units: LUTs / FFs / DSP48s / BRAM36s for area
+#: entries, nanojoules for energy entries (at the paper's ~100 MHz
+#: Kintex-7 operating point).
+CALIBRATION: Dict[str, object] = {
+    # scalar core: the T13 3-hart IMT front end (fetch/decode/regfile),
+    # present once regardless of coprocessor scheme
+    "core_luts": 7400.0,
+    "core_ffs": 3900.0,
+    # per-MFU fixed control (sequencer, CSRs, hart arbitration)
+    "mfu_base_luts": 450.0,
+    "mfu_base_ffs": 260.0,
+    # per-lane datapath cost of each internal functional unit at full
+    # 32-bit width (multiplier maps to DSP slices)
+    "unit_luts_per_lane": {"adder": 110.0, "multiplier": 55.0,
+                          "shifter": 85.0, "cmp": 40.0, "move": 20.0},
+    "unit_ffs_per_lane": {"adder": 38.0, "multiplier": 64.0,
+                          "shifter": 32.0, "cmp": 16.0, "move": 8.0},
+    "multiplier_dsps_per_lane": 3.0,
+    # sub-word support factor on lane datapath cost (lane splitters,
+    # carry breaks, per-subword predication muxes)
+    "subword_factor": {32: 1.0, 16: 1.12, 8: 1.25},
+    # SPM banks: one BRAM36 holds ~4 KiB; each SPMI adds a base
+    # controller plus a per-bank interleaver slice (width D)
+    "bram_kbytes": 4.0,
+    "spmi_base_luts": 260.0,
+    "spmi_base_ffs": 140.0,
+    "spmi_luts_per_bank": 90.0,
+    "spmi_ffs_per_bank": 42.0,
+    # load/store unit (one per SPMI — it rides the interface port)
+    "lsu_luts": 520.0,
+    "lsu_ffs": 270.0,
+    # LUT-equivalent aggregation weights (a DSP48 / BRAM36 in LUT terms,
+    # the usual FPGA area-accounting convention)
+    "ff_lut_weight": 0.35,
+    "dsp_lut_weight": 102.0,
+    "bram_lut_weight": 96.0,
+    # energy: static power scales with area; dynamic adds per active
+    # engine-cycle costs (lane-count weighted for the MFU stream)
+    "static_nj_per_cycle_per_kluteq": 0.045,
+    "core_nj_per_cycle": 0.35,
+    "mfu_nj_per_active_lane_cycle": 0.011,
+    "lsu_nj_per_active_cycle": 0.14,
+}
+
+
+@dataclass(frozen=True)
+class HardwareCost:
+    """FPGA-resource totals for one configuration, with a per-subsystem
+    LUT-equivalent breakdown."""
+
+    luts: float
+    ffs: float
+    dsps: float
+    brams: float
+    breakdown: Dict[str, float]       # subsystem -> LUT-equivalent area
+
+    @property
+    def area_luteq(self) -> float:
+        """One aggregate area scalar (LUT equivalents)."""
+        c = CALIBRATION
+        return (self.luts + c["ff_lut_weight"] * self.ffs
+                + c["dsp_lut_weight"] * self.dsps
+                + c["bram_lut_weight"] * self.brams)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"luts": round(self.luts, 1), "ffs": round(self.ffs, 1),
+                "dsps": round(self.dsps, 1),
+                "brams": round(self.brams, 1),
+                "area_luteq": round(self.area_luteq, 1),
+                "breakdown": {k: round(v, 1)
+                              for k, v in self.breakdown.items()}}
+
+
+def _luteq(luts: float, ffs: float = 0.0, dsps: float = 0.0,
+           brams: float = 0.0) -> float:
+    c = CALIBRATION
+    return (luts + c["ff_lut_weight"] * ffs + c["dsp_lut_weight"] * dsps
+            + c["bram_lut_weight"] * brams)
+
+
+def mfu_cost(cfg: KlessydraConfig) -> Dict[str, float]:
+    """LUT/FF/DSP of all F MFUs: per internal unit, ``fu_count``
+    instances of a D-lane datapath, scaled by the sub-word factor."""
+    c = CALIBRATION
+    sub = c["subword_factor"][cfg.subword_bits]
+    luts = cfg.F * c["mfu_base_luts"]
+    ffs = cfg.F * c["mfu_base_ffs"]
+    dsps = 0.0
+    for unit in MFU_UNITS:
+        n = cfg.F * cfg.fu_count(unit) * cfg.D
+        luts += n * c["unit_luts_per_lane"][unit] * sub
+        ffs += n * c["unit_ffs_per_lane"][unit] * sub
+        if unit == "multiplier":
+            dsps += n * c["multiplier_dsps_per_lane"]
+    return {"luts": luts, "ffs": ffs, "dsps": dsps}
+
+
+def spm_cost(cfg: KlessydraConfig) -> Dict[str, float]:
+    """BRAM for the SPM arrays plus the M replicated SPMI interleavers
+    (width D) and their LSU ports."""
+    c = CALIBRATION
+    brams = cfg.M * cfg.N * (cfg.spm_kbytes / c["bram_kbytes"])
+    luts = cfg.M * (c["spmi_base_luts"]
+                    + cfg.D * c["spmi_luts_per_bank"] + c["lsu_luts"])
+    ffs = cfg.M * (c["spmi_base_ffs"]
+                   + cfg.D * c["spmi_ffs_per_bank"] + c["lsu_ffs"])
+    return {"luts": luts, "ffs": ffs, "brams": brams}
+
+
+def hardware_cost(cfg: KlessydraConfig) -> HardwareCost:
+    """The full configuration: scalar core + MFUs + SPM subsystem."""
+    c = CALIBRATION
+    mfu = mfu_cost(cfg)
+    spm = spm_cost(cfg)
+    luts = c["core_luts"] + mfu["luts"] + spm["luts"]
+    ffs = c["core_ffs"] + mfu["ffs"] + spm["ffs"]
+    dsps = mfu["dsps"]
+    brams = spm["brams"]
+    breakdown = {
+        "core": _luteq(c["core_luts"], c["core_ffs"]),
+        "mfu": _luteq(mfu["luts"], mfu["ffs"], mfu["dsps"]),
+        "spm": _luteq(spm["luts"], spm["ffs"], brams=spm["brams"]),
+    }
+    return HardwareCost(luts, ffs, dsps, brams, breakdown)
+
+
+def energy_per_cycle_static(cfg: KlessydraConfig) -> float:
+    """Static + clock-tree nJ burned every cycle, area-proportional."""
+    c = CALIBRATION
+    return (c["core_nj_per_cycle"]
+            + c["static_nj_per_cycle_per_kluteq"]
+            * hardware_cost(cfg).area_luteq / 1000.0)
+
+
+def energy_model(cfg: KlessydraConfig, sim) -> Dict[str, float]:
+    """Energy of one simulated run (``sim`` is a
+    :class:`~repro.core.simulator.SimResult`): static power for the
+    whole window plus dynamic energy for the MFU-stream and LSU busy
+    cycles. Lane-count weights the MFU stream (D banks switching), with
+    sub-word packing holding the switched width constant — narrow
+    elements save energy through *fewer cycles*, not cheaper cycles."""
+    c = CALIBRATION
+    lanes = cfg.D
+    static = energy_per_cycle_static(cfg) * sim.cycles
+    mfu_dyn = c["mfu_nj_per_active_lane_cycle"] * lanes * sim.mfu_busy_cycles
+    lsu_dyn = c["lsu_nj_per_active_cycle"] * sim.lsu_busy_cycles
+    total = static + mfu_dyn + lsu_dyn
+    return {"energy_nj": total, "static_nj": static,
+            "mfu_dynamic_nj": mfu_dyn, "lsu_dynamic_nj": lsu_dyn,
+            "nj_per_cycle": total / max(sim.cycles, 1)}

@@ -1,0 +1,223 @@
+"""Declarative design space over Klessydra-T coprocessor configurations.
+
+The paper's contribution is not one configuration but a *sweep*: SPM
+interface replication (M), MFU replication (F), lane width (D) and
+sub-word precision across the shared / symmetric-MIMD / heterogeneous-
+MIMD interconnection schemes, each judged on cycles, hardware cost and
+energy. A :class:`DesignSpace` declares that grid once; its deterministic
+:meth:`~DesignSpace.points` enumeration feeds the sweep driver
+(:mod:`repro.kvi.dse.sweep`), the cost model (:mod:`repro.kvi.dse.cost`)
+and the Pareto analysis (:mod:`repro.kvi.dse.pareto`).
+
+A :class:`DesignPoint` couples the *data* precision of the workload to
+the *hardware* sub-word capability: an 8-bit point runs 8-bit programs
+on a datapath with full sub-word lanes (``subword_bits=8``), while a
+32-bit point carries no sub-word hardware at all — so the precision axis
+trades real area against real cycles, exactly the SPEED-style
+multi-precision trade-off.
+
+Invalid combinations are rejected eagerly (``ValueError`` naming the
+field/axis); SPM-capacity feasibility against a concrete workload is a
+separate *preflight* (:func:`preflight_point`) reusing the lowering
+allocator's :class:`~repro.kvi.lowering.SpmOverflowError` check.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import KlessydraConfig
+
+SCHEMES = ("shared", "sym_mimd", "het_mimd")
+
+_VALID_PRECISIONS = (8, 16, 32)
+
+
+def scheme_config(scheme: str, D: int = 4, spm_kbytes: int = 64,
+                  M: int = 3, F: Optional[int] = None,
+                  subword_bits: int = 8,
+                  fu_counts: Tuple[Tuple[str, int], ...] = (),
+                  name: Optional[str] = None, **kw) -> KlessydraConfig:
+    """One scheme name -> a validated :class:`KlessydraConfig`.
+
+    ``M`` is the SPMI replication of the MIMD schemes (the shared scheme
+    always has M=F=1); ``F`` overrides the heterogeneous scheme's MFU
+    count (default 1, the paper's configuration)."""
+    if scheme == "shared":
+        m, f = 1, 1
+    elif scheme == "sym_mimd":
+        m, f = M, M
+    elif scheme == "het_mimd":
+        m, f = M, 1 if F is None else F
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}; valid: {SCHEMES}")
+    return KlessydraConfig(name or scheme, M=m, F=f, D=D,
+                           spm_kbytes=spm_kbytes,
+                           subword_bits=subword_bits,
+                           fu_counts=fu_counts, **kw)
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One fully-specified coprocessor configuration + workload precision
+    + per-point pass toggles — the unit the sweep executes."""
+
+    scheme: str
+    M: int
+    F: int
+    D: int
+    precision_bits: int = 32
+    spm_kbytes: int = 64
+    chaining: bool = False
+    fu_counts: Tuple[Tuple[str, int], ...] = ()
+    # None -> the backend's default optimizing pipeline; () -> raw
+    # programs; a tuple of registered pass names -> custom pipeline.
+    passes: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"DesignPoint: scheme must be one of "
+                             f"{SCHEMES}, got {self.scheme!r}")
+        if self.scheme == "shared" and (self.M != 1 or self.F != 1):
+            raise ValueError(f"DesignPoint: shared scheme requires "
+                             f"M=F=1, got M={self.M} F={self.F}")
+        if self.scheme == "sym_mimd" and (self.M < 2 or self.F != self.M):
+            raise ValueError(f"DesignPoint: sym_mimd requires F=M>=2, "
+                             f"got M={self.M} F={self.F}")
+        if self.scheme == "het_mimd" and not (1 <= self.F < self.M):
+            raise ValueError(f"DesignPoint: het_mimd requires "
+                             f"1 <= F < M, got M={self.M} F={self.F}")
+        if self.precision_bits not in _VALID_PRECISIONS:
+            raise ValueError(f"DesignPoint: precision_bits must be one "
+                             f"of {_VALID_PRECISIONS}, got "
+                             f"{self.precision_bits}")
+        # config construction validates D / spm_kbytes / fu_counts and
+        # raises the field-naming ValueError itself
+        self.config()
+
+    @property
+    def elem_bytes(self) -> int:
+        return self.precision_bits // 8
+
+    @property
+    def name(self) -> str:
+        n = (f"{self.scheme}_M{self.M}F{self.F}_D{self.D}"
+             f"_b{self.precision_bits}_spm{self.spm_kbytes}")
+        if self.chaining:
+            n += "_chain"
+        if self.passes == ():
+            n += "_raw"
+        elif self.passes is not None:
+            n += "_p" + "-".join(self.passes)
+        if self.fu_counts:
+            n += "_fu" + "-".join(f"{u}{c}" for u, c in self.fu_counts)
+        return n
+
+    def config(self) -> KlessydraConfig:
+        """The concrete machine: hardware sub-word support matches the
+        point's data precision (a 32-bit point carries no sub-word
+        lanes; an 8-bit point carries the full splitters)."""
+        return scheme_config(self.scheme, D=self.D,
+                             spm_kbytes=self.spm_kbytes, M=self.M,
+                             F=self.F, subword_bits=self.precision_bits,
+                             fu_counts=self.fu_counts, name=self.name)
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    """A declarative grid over design points. Axes are tuples; the
+    product (restricted to scheme-consistent combinations) is the swept
+    space. Enumeration order is deterministic: axes iterate in declared
+    order, nested scheme -> M -> F -> D -> precision -> spm -> chaining
+    -> pipeline -> fu_counts."""
+
+    schemes: Tuple[str, ...] = SCHEMES
+    lanes: Tuple[int, ...] = (2, 4, 8, 16)            # D axis
+    precisions: Tuple[int, ...] = (8, 16, 32)         # sub-word bits
+    spm_kbytes: Tuple[int, ...] = (64,)
+    chaining: Tuple[bool, ...] = (False,)
+    replication: Tuple[int, ...] = (3,)               # M axis (MIMD)
+    het_fus: Tuple[int, ...] = (1,)                   # F axis (het only)
+    pipelines: Tuple[Optional[Tuple[str, ...]], ...] = (None,)
+    fu_counts: Tuple[Tuple[Tuple[str, int], ...], ...] = ((),)
+
+    def __post_init__(self):
+        def bad(axis: str, why: str):
+            raise ValueError(f"DesignSpace: axis {axis!r} {why}")
+        for axis in ("schemes", "lanes", "precisions", "spm_kbytes",
+                     "chaining", "replication", "het_fus", "pipelines",
+                     "fu_counts"):
+            if not getattr(self, axis):
+                bad(axis, "must be non-empty")
+        for s in self.schemes:
+            if s not in SCHEMES:
+                bad("schemes", f"contains unknown scheme {s!r} "
+                               f"(valid: {SCHEMES})")
+        for p in self.precisions:
+            if p not in _VALID_PRECISIONS:
+                bad("precisions", f"contains {p}; valid: "
+                                  f"{_VALID_PRECISIONS}")
+        for d in self.lanes:
+            if d < 1 or (d & (d - 1)):
+                bad("lanes", f"must contain powers of two >= 1 "
+                             f"(SPM bank counts), got {d}")
+        for s in self.spm_kbytes:
+            if s < 1:
+                bad("spm_kbytes", f"must be >= 1 KiB, got {s}")
+        for m in self.replication:
+            if m < 2:
+                bad("replication", f"MIMD replication must be >= 2, "
+                                   f"got {m}")
+        for f in self.het_fus:
+            if f < 1:
+                bad("het_fus", f"must be >= 1, got {f}")
+
+    def points(self) -> Tuple[DesignPoint, ...]:
+        """Deterministic enumeration of all valid design points.
+        Scheme-inconsistent combinations (e.g. het F >= M) are skipped;
+        the shared scheme collapses the M axis (always M=F=1)."""
+        out: List[DesignPoint] = []
+        seen = set()
+        for scheme in self.schemes:
+            if scheme == "shared":
+                mf_pairs = [(1, 1)]
+            elif scheme == "sym_mimd":
+                mf_pairs = [(m, m) for m in self.replication]
+            else:
+                mf_pairs = [(m, f) for m in self.replication
+                            for f in self.het_fus if f < m]
+            for m, f in mf_pairs:
+                for d in self.lanes:
+                    for prec in self.precisions:
+                        for spm in self.spm_kbytes:
+                            for ch in self.chaining:
+                                for pipe in self.pipelines:
+                                    for fu in self.fu_counts:
+                                        pt = DesignPoint(
+                                            scheme, m, f, d, prec, spm,
+                                            ch, fu, pipe)
+                                        if pt.name not in seen:
+                                            seen.add(pt.name)
+                                            out.append(pt)
+        return tuple(out)
+
+    @property
+    def size(self) -> int:
+        return len(self.points())
+
+
+def preflight_point(point: DesignPoint, programs: Sequence,
+                    ) -> Optional[str]:
+    """SPM-capacity feasibility of ``point`` for a set of programs: runs
+    the lowering allocator's liveness-based linear scan (the same code
+    path the real execution takes) and returns the
+    :class:`~repro.kvi.lowering.SpmOverflowError` message of the first
+    program that cannot be placed, or ``None`` when all fit."""
+    from repro.kvi.lowering import SpmOverflowError, allocate_vregs
+    cfg = point.config()
+    for p in programs:
+        try:
+            allocate_vregs(p, cfg)
+        except SpmOverflowError as e:
+            return str(e)
+    return None

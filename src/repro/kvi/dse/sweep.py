@@ -1,0 +1,298 @@
+"""The sweep driver: design points x paper kernels -> measured records.
+
+Each :class:`~repro.kvi.dse.space.DesignPoint` is executed through
+:class:`~repro.kvi.cyclesim.CycleSimBackend` exactly the way any other
+caller would run it — programs go through the optimizing pass pipeline
+(honoring the point's per-point ``passes`` / ``chaining`` toggles), are
+lowered once per configuration (liveness-based SPM allocation,
+:class:`SpmOverflowError` preflight), and the event-driven simulator
+produces cycles plus the per-hart busy/stall/idle breakdown. The cost
+model (:mod:`repro.kvi.dse.cost`) adds area and energy.
+
+Points fan out over a thread pool (``max_workers``); records always
+return in enumeration order, so sweeps are deterministic run-to-run.
+
+Measured per point:
+  * per kernel, the paper's homogeneous protocol — the program
+    replicated on all harts (``KviWorkload.replicate``),
+  * the composite protocol — one kernel pinned per hart
+    (``KviWorkload.composite``), when the machine has enough harts.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.kvi.dse.cost import HardwareCost, energy_model, hardware_cost
+from repro.kvi.dse.space import (DesignPoint, DesignSpace, preflight_point)
+from repro.kvi.ir import KviProgram
+
+#: scheme-dict key under which the swept config is registered
+POINT_KEY = "dse"
+
+
+@dataclass
+class PointRecord:
+    """Everything measured for one design point."""
+
+    point: DesignPoint
+    status: str                       # "ok" | "incompatible"
+    reason: Optional[str] = None
+    area: Optional[HardwareCost] = None
+    # kernel name -> {"cycles", "energy_nj", "nj_per_cycle",
+    #                 "mfu_utilization", "hart_utilization": [...]}
+    kernels: Dict[str, Dict[str, object]] = field(default_factory=dict)
+    composite: Optional[Dict[str, object]] = None
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def metrics(self, kernel: str) -> Tuple[float, float, float]:
+        """(cycles, area_luteq, energy_nj) — the Pareto objectives.
+        ``kernel`` may be ``"composite"`` for the composite workload."""
+        k = self.composite if kernel == "composite" \
+            else self.kernels[kernel]
+        return (float(k["cycles"]), self.area.area_luteq,
+                float(k["energy_nj"]))
+
+    def as_dict(self) -> Dict[str, object]:
+        pt = self.point
+        d = {"name": pt.name, "scheme": pt.scheme, "M": pt.M, "F": pt.F,
+             "D": pt.D, "precision_bits": pt.precision_bits,
+             "spm_kbytes": pt.spm_kbytes, "chaining": pt.chaining,
+             "passes": list(pt.passes) if pt.passes is not None else None,
+             "status": self.status, "wall_s": round(self.wall_s, 4)}
+        if self.reason:
+            d["reason"] = self.reason
+        if self.area is not None:
+            d["area"] = self.area.as_dict()
+        if self.kernels:
+            d["kernels"] = self.kernels
+        if self.composite is not None:
+            d["composite"] = self.composite
+        return d
+
+
+@dataclass
+class SweepResult:
+    """All records of one sweep, JSON/CSV-persistable."""
+
+    records: List[PointRecord]
+    kernel_names: Tuple[str, ...]
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def ok_records(self) -> List[PointRecord]:
+        return [r for r in self.records if r.ok]
+
+    def to_json(self) -> Dict[str, object]:
+        return {"meta": dict(self.meta),
+                "kernels": list(self.kernel_names),
+                "points": [r.as_dict() for r in self.records]}
+
+    def save_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    def csv_rows(self) -> List[Dict[str, object]]:
+        """Flat (point x kernel) rows for spreadsheet analysis."""
+        rows = []
+        for r in self.records:
+            if not r.ok:
+                continue
+            base = {"point": r.point.name, "scheme": r.point.scheme,
+                    "M": r.point.M, "F": r.point.F, "D": r.point.D,
+                    "precision_bits": r.point.precision_bits,
+                    "spm_kbytes": r.point.spm_kbytes,
+                    "chaining": int(r.point.chaining),
+                    "area_luteq": round(r.area.area_luteq, 1)}
+            measures = dict(r.kernels)
+            if r.composite is not None:
+                measures["composite"] = r.composite
+            for kname, k in measures.items():
+                rows.append(dict(
+                    base, kernel=kname, cycles=k["cycles"],
+                    energy_nj=round(float(k["energy_nj"]), 1),
+                    mean_hart_utilization=round(float(np.mean(
+                        [h["utilization"]
+                         for h in k["hart_utilization"]])), 4)))
+        return rows
+
+    def save_csv(self, path: str) -> None:
+        rows = self.csv_rows()
+        if not rows:
+            return
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+
+
+def _measure(backend, workload, cfg) -> Dict[str, object]:
+    res = backend.run_workload(workload, functional=False)
+    sim = res.timing[POINT_KEY]
+    util = res.hart_utilization[POINT_KEY]
+    e = energy_model(cfg, sim)
+    return {"cycles": sim.cycles,
+            "energy_nj": round(e["energy_nj"], 2),
+            "nj_per_cycle": round(e["nj_per_cycle"], 4),
+            "mfu_utilization": round(sim.mfu_utilization, 4),
+            "hart_utilization": util}
+
+
+def optimize_kernels(kernels: Dict[str, KviProgram],
+                     passes: Optional[Tuple[str, ...]],
+                     ) -> Dict[str, KviProgram]:
+    """The kernels after the pass pipeline a point with ``passes``
+    would run. Split out so the sweep driver can share one optimized
+    set across every point with the same (precision, passes)."""
+    from repro.kvi.passes import PassPipeline
+    pipe = PassPipeline.from_spec(passes)
+    if not pipe:
+        return kernels
+    return {name: pipe.run(p) for name, p in kernels.items()}
+
+
+def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
+              composite: bool = True,
+              preoptimized: bool = False) -> PointRecord:
+    """Execute every kernel (homogeneous protocol) plus the composite
+    workload on one design point; incompatible points (SPM too small for
+    a kernel's peak-live footprint) are recorded, not raised.
+
+    The point's pass pipeline runs up front (unless the caller already
+    did, ``preoptimized=True``) and both the SPM preflight and the
+    backend see the optimized programs — so a kernel that only fits the
+    scratchpad after dce/copy_prop (the pipeline's register-reuse
+    capability) is a valid design point, and the composite workload
+    does not re-optimize what the homogeneous runs already did."""
+    from repro.kvi.cyclesim import CycleSimBackend
+    from repro.kvi.workload import KviWorkload
+
+    t0 = time.perf_counter()
+    cfg = point.config()
+    if not preoptimized:
+        kernels = optimize_kernels(kernels, point.passes)
+    reason = preflight_point(point, list(kernels.values()))
+    if reason is not None:
+        return PointRecord(point, "incompatible", reason=reason,
+                           wall_s=time.perf_counter() - t0)
+    backend = CycleSimBackend(schemes={POINT_KEY: cfg}, passes=(),
+                              chaining=point.chaining)
+    rec = PointRecord(point, "ok", area=hardware_cost(cfg))
+    for name, prog in kernels.items():
+        wl = KviWorkload.replicate(prog, cfg.harts)
+        rec.kernels[name] = _measure(backend, wl, cfg)
+    if composite and cfg.harts >= len(kernels):
+        wl = KviWorkload.composite(
+            {h: [prog] for h, prog in enumerate(kernels.values())},
+            name="composite")
+        rec.composite = _measure(backend, wl, cfg)
+    rec.wall_s = time.perf_counter() - t0
+    return rec
+
+
+KernelFactory = Callable[[int], Dict[str, KviProgram]]
+
+
+def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
+          kernel_factory: KernelFactory,
+          composite: bool = True,
+          max_workers: int = 4,
+          emit: Optional[Callable[[str], None]] = None) -> SweepResult:
+    """Run every point of ``space`` over the kernels the factory builds
+    for that point's precision. Kernel programs are built once per
+    distinct precision and shared across points (read-only)."""
+    points = space.points() if isinstance(space, DesignSpace) \
+        else tuple(space)
+    if not points:
+        raise ValueError("sweep needs at least one design point")
+    kernels_by_prec: Dict[int, Dict[str, KviProgram]] = {}
+    for pt in points:
+        if pt.precision_bits not in kernels_by_prec:
+            kernels_by_prec[pt.precision_bits] = \
+                kernel_factory(pt.precision_bits)
+    kernel_names = tuple(next(iter(kernels_by_prec.values())))
+    # the optimized programs depend only on (precision, passes) — run
+    # the pipeline once per distinct pair, not once per point
+    opt_cache: Dict[tuple, Dict[str, KviProgram]] = {}
+    for pt in points:
+        key = (pt.precision_bits, pt.passes)
+        if key not in opt_cache:
+            opt_cache[key] = optimize_kernels(
+                kernels_by_prec[pt.precision_bits], pt.passes)
+
+    def job(pt: DesignPoint) -> PointRecord:
+        return run_point(pt, opt_cache[(pt.precision_bits, pt.passes)],
+                         composite, preoptimized=True)
+
+    t0 = time.perf_counter()
+    if max_workers and max_workers > 1:
+        with ThreadPoolExecutor(max_workers=max_workers) as ex:
+            records = list(ex.map(job, points))
+    else:
+        records = [job(pt) for pt in points]
+    wall = time.perf_counter() - t0
+
+    if emit:
+        for r in records:
+            if r.ok:
+                cells = " ".join(
+                    f"{k}={v['cycles']}" for k, v in r.kernels.items())
+                emit(f"{r.point.name:42s} area={r.area.area_luteq:9.0f} "
+                     f"{cells}")
+            else:
+                emit(f"{r.point.name:42s} SKIP ({r.reason})")
+    n_ok = sum(r.ok for r in records)
+    return SweepResult(
+        list(records), kernel_names,
+        meta={"n_points": len(points), "n_ok": n_ok,
+              "n_incompatible": len(points) - n_ok,
+              "schemes": sorted({p.scheme for p in points}),
+              "wall_s": round(wall, 3)})
+
+
+# ---------------------------------------------------------------------------
+# The paper's kernel set as a precision-parameterized factory
+# ---------------------------------------------------------------------------
+
+
+def paper_kernel_factory(smoke: bool = False, seed: int = 0,
+                         ) -> KernelFactory:
+    """conv / fft / matmul at sweep-appropriate sizes. ``smoke`` shrinks
+    the kernels so the whole smoke sweep finishes in seconds; data is
+    drawn from ``seed`` so BENCH inputs are reproducible run-to-run.
+    MatMul is forced onto the SPM-resident path at every precision so
+    the precision axis compares identical instruction structures."""
+    S, n_fft, m = (24, 64, 24) if smoke else (32, 256, 64)
+
+    def factory(precision_bits: int) -> Dict[str, KviProgram]:
+        from repro.kvi.programs import (conv2d_program, fft_program,
+                                        matmul_program)
+        eb = precision_bits // 8
+        rng = np.random.default_rng(seed)
+        lim = {1: 8, 2: 64, 4: 128}[eb]
+        img = rng.integers(-lim, lim, (S, S)).astype(np.int32)
+        filt = rng.integers(-8, 8, (3, 3)).astype(np.int32)
+        A = rng.integers(-lim // 2 or 2, lim // 2 or 2, (m, m)
+                         ).astype(np.int32)
+        B = rng.integers(-lim // 2 or 2, lim // 2 or 2, (m, m)
+                         ).astype(np.int32)
+        re = rng.integers(-lim, lim, n_fft).astype(np.int32)
+        im = rng.integers(-lim, lim, n_fft).astype(np.int32)
+        return {
+            "conv": conv2d_program(img, filt, shift=4, elem_bytes=eb),
+            "fft": fft_program(re, im, elem_bytes=eb),
+            "matmul": matmul_program(A, B, shift=2, resident=True,
+                                     elem_bytes=eb),
+        }
+
+    return factory

@@ -81,7 +81,7 @@ def allocate_vregs(program: KviProgram,
     :class:`SpmOverflowError` on overflow.
     """
     line = max(config.D * 4, 4)
-    capacity = config.N * config.spm_kbytes * 1024
+    capacity = config.spm_capacity_bytes
     intervals = reg_intervals(program, pin_uninitialized=True)
     placed: List[Tuple[int, int, int, int]] = []   # (addr, size, start, end)
     addr_of: Dict[int, int] = {}

@@ -25,7 +25,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.kvi.backend import BackendResult
-from repro.kvi.ir import KviProgram, KviProgramBuilder
+from repro.kvi.ir import KviProgram, KviProgramBuilder, np_dtype
 
 # ---------------------------------------------------------------------------
 # 2D convolution, FxF filter, zero padding, fixed-point post-scale
@@ -33,18 +33,21 @@ from repro.kvi.ir import KviProgram, KviProgramBuilder
 
 
 def conv2d_program(img: np.ndarray, filt: np.ndarray,
-                   shift: int = 0) -> KviProgram:
+                   shift: int = 0, elem_bytes: int = 4) -> KviProgram:
+    """``elem_bytes`` selects the sub-word precision (4/2/1 for
+    32/16/8-bit fixed point); narrow elements pack more SIMD lanes per
+    SPM bank on hardware with sub-word support (config.subword_bits)."""
     S = img.shape[0]
     F = filt.shape[0]
     pad = F // 2
     Sp = S + 2 * pad
-    padded = np.zeros((Sp, Sp), np.int32)
+    padded = np.zeros((Sp, Sp), np_dtype(elem_bytes))
     padded[pad:pad + S, pad:pad + S] = img
     b = KviProgramBuilder(f"conv{S}x{S}_f{F}")
-    hin = b.mem_in("img", padded)
-    rin = b.vreg("in", Sp * Sp)
-    acc = b.vreg("acc", S)
-    tmp = b.vreg("tmp", S)
+    hin = b.mem_in("img", padded, elem_bytes=elem_bytes)
+    rin = b.vreg("in", Sp * Sp, elem_bytes=elem_bytes)
+    acc = b.vreg("acc", S, elem_bytes=elem_bytes)
+    tmp = b.vreg("tmp", S, elem_bytes=elem_bytes)
     b.scalar(40)                                  # kernel prologue
     b.kmemld(rin, hin)
     for i in range(S):
@@ -63,10 +66,10 @@ def conv2d_program(img: np.ndarray, filt: np.ndarray,
                     b.kaddv(acc, acc, tmp)
         if shift:
             b.ksrav(acc, acc, scalar=shift)
-        hrow = b.mem_out(f"row{i}", S)
+        hrow = b.mem_out(f"row{i}", S, elem_bytes=elem_bytes)
         b.kmemstr(hrow, acc)
     return b.build(alg_ops=2 * S * S * F * F, kind="conv2d", S=S, F=F,
-                   shift=shift)
+                   shift=shift, elem_bytes=elem_bytes)
 
 
 def conv2d_result(res: BackendResult, S: Optional[int] = None) -> np.ndarray:
@@ -88,19 +91,21 @@ def conv2d_result(res: BackendResult, S: Optional[int] = None) -> np.ndarray:
 
 def matmul_program(A: np.ndarray, B: np.ndarray, shift: int = 0,
                    resident: Optional[bool] = None,
-                   spm_bytes: Optional[int] = None) -> KviProgram:
+                   spm_bytes: Optional[int] = None,
+                   elem_bytes: int = 4) -> KviProgram:
     n, m = A.shape
     _, p = B.shape
+    dt = np_dtype(elem_bytes)
     if resident is None:
         cap = spm_bytes if spm_bytes is not None else 4 * 4 * 1024
-        resident = m * p * 4 + (2 * p + n) * 4 <= cap
+        resident = (m * p + 2 * p + n) * elem_bytes <= cap
     b = KviProgramBuilder(f"matmul{n}x{p}")
 
     if resident:
-        hB = b.mem_in("B", B.astype(np.int32))
-        rB = b.vreg("B", m * p)
-        acc = b.vreg("acc", p)
-        tmp = b.vreg("tmp", p)
+        hB = b.mem_in("B", B.astype(dt), elem_bytes=elem_bytes)
+        rB = b.vreg("B", m * p, elem_bytes=elem_bytes)
+        acc = b.vreg("acc", p, elem_bytes=elem_bytes)
+        tmp = b.vreg("tmp", p, elem_bytes=elem_bytes)
         b.scalar(40)                              # kernel prologue
         b.kmemld(rB, hB)
         for i in range(n):
@@ -116,24 +121,24 @@ def matmul_program(A: np.ndarray, B: np.ndarray, shift: int = 0,
                     b.kaddv(acc, acc, tmp)
             if shift:
                 b.ksrav(acc, acc, scalar=shift)
-            hrow = b.mem_out(f"row{i}", p)
+            hrow = b.mem_out(f"row{i}", p, elem_bytes=elem_bytes)
             b.kmemstr(hrow, acc)
         return b.build(alg_ops=2 * n * m * p, kind="matmul", n=n, p=p,
-                       shift=shift, resident=True)
+                       shift=shift, resident=True, elem_bytes=elem_bytes)
 
     # streamed path: per output element, kdotp(A_row, B_col)
-    Bt = np.ascontiguousarray(B.astype(np.int32).T)
-    arow = b.vreg("arow", m)
-    bcol = b.vreg("bcol", m)
-    acc = b.vreg("acc", p)
+    Bt = np.ascontiguousarray(B.astype(dt).T)
+    arow = b.vreg("arow", m, elem_bytes=elem_bytes)
+    bcol = b.vreg("bcol", m, elem_bytes=elem_bytes)
+    acc = b.vreg("acc", p, elem_bytes=elem_bytes)
     b.scalar(40)                                  # kernel prologue
     for i in range(n):
         b.scalar(3)
-        hA = b.mem_in(f"arow{i}", A[i].astype(np.int32))
+        hA = b.mem_in(f"arow{i}", A[i].astype(dt), elem_bytes=elem_bytes)
         b.kmemld(arow, hA)
         for j in range(p):
             b.scalar(3)                           # col pointer, loop, store rd
-            hcol = b.mem_in(f"bcol{i}_{j}", Bt[j])
+            hcol = b.mem_in(f"bcol{i}_{j}", Bt[j], elem_bytes=elem_bytes)
             b.kmemld(bcol, hcol)
             if shift:
                 b.kdotpps(acc[j], arow, bcol, shift)
@@ -141,10 +146,10 @@ def matmul_program(A: np.ndarray, B: np.ndarray, shift: int = 0,
                 b.kdotp(acc[j], arow, bcol)
             # register-file result written to acc[j]: one scalar store
             b.scalar(1)
-        hrow = b.mem_out(f"row{i}", p)
+        hrow = b.mem_out(f"row{i}", p, elem_bytes=elem_bytes)
         b.kmemstr(hrow, acc)
     return b.build(alg_ops=2 * n * m * p, kind="matmul", n=n, p=p,
-                   shift=shift, resident=False)
+                   shift=shift, resident=False, elem_bytes=elem_bytes)
 
 
 def matmul_result(res: BackendResult, n: Optional[int] = None) -> np.ndarray:
@@ -159,35 +164,47 @@ def matmul_result(res: BackendResult, n: Optional[int] = None) -> np.ndarray:
 
 Q = 15
 
+# twiddle Q-format per element width: Q15 products fit int32; narrower
+# fixed-point uses a correspondingly narrower fraction (Q7/Q3) so the
+# sub-word sweep's programs stay executable end to end
+_Q_BY_WIDTH = {4: 15, 2: 7, 1: 3}
 
-def _twiddles(m: int) -> tuple:
+
+def _twiddles(m: int, q: int = Q, dtype=np.int32) -> tuple:
     k = np.arange(m // 2)
     w = np.exp(-2j * np.pi * k / m)
-    return ((w.real * (1 << Q)).astype(np.int32),
-            (w.imag * (1 << Q)).astype(np.int32))
+    return ((w.real * (1 << q)).astype(dtype),
+            (w.imag * (1 << q)).astype(dtype))
 
 
-def fft_program(x_re: np.ndarray, x_im: np.ndarray) -> KviProgram:
+def fft_program(x_re: np.ndarray, x_im: np.ndarray,
+                elem_bytes: int = 4) -> KviProgram:
     n = len(x_re)
     assert n & (n - 1) == 0
+    dt = np_dtype(elem_bytes)
+    q = _Q_BY_WIDTH[elem_bytes]
     b = KviProgramBuilder(f"fft{n}")
-    hre = b.mem_in("x_re", x_re.astype(np.int32))
-    him = b.mem_in("x_im", x_im.astype(np.int32))
-    are = b.vreg("re", n)
-    aim = b.vreg("im", n)
-    t1 = b.vreg("t1", n // 2)
-    t2 = b.vreg("t2", n // 2)
-    dre = b.vreg("dre", n // 2)
-    dim = b.vreg("dim", n // 2)
+    hre = b.mem_in("x_re", x_re.astype(dt), elem_bytes=elem_bytes)
+    him = b.mem_in("x_im", x_im.astype(dt), elem_bytes=elem_bytes)
+
+    def vreg(name, length):
+        return b.vreg(name, length, elem_bytes=elem_bytes)
+
+    are = vreg("re", n)
+    aim = vreg("im", n)
+    t1 = vreg("t1", n // 2)
+    t2 = vreg("t2", n // 2)
+    dre = vreg("dre", n // 2)
+    dim = vreg("dim", n // 2)
     # per-size twiddle vectors, loaded once
     tw = {}
     m = n
     while m >= 2:
-        wre, wim = _twiddles(m)
-        rr = b.vreg(f"wre{m}", m // 2)
-        ri = b.vreg(f"wim{m}", m // 2)
-        b.kmemld(rr, b.mem_in(f"wre{m}", wre))
-        b.kmemld(ri, b.mem_in(f"wim{m}", wim))
+        wre, wim = _twiddles(m, q, dt)
+        rr = vreg(f"wre{m}", m // 2)
+        ri = vreg(f"wim{m}", m // 2)
+        b.kmemld(rr, b.mem_in(f"wre{m}", wre, elem_bytes=elem_bytes))
+        b.kmemld(ri, b.mem_in(f"wim{m}", wim, elem_bytes=elem_bytes))
         tw[m] = (rr, ri)
         m //= 2
     b.scalar(40)                                  # kernel prologue
@@ -208,16 +225,16 @@ def fft_program(x_re: np.ndarray, x_im: np.ndarray) -> KviProgram:
         b.ksubv(vdim, lo_im, hi_im)
         b.kaddv(lo_re, lo_re, hi_re)
         b.kaddv(lo_im, lo_im, hi_im)
-        # hi = d * w  (Q15)
+        # hi = d * w  (Q-format fixed point)
         b.kvmul(th1, vdre, wre)
-        b.ksrav(th1, th1, scalar=Q)
+        b.ksrav(th1, th1, scalar=q)
         b.kvmul(th2, vdim, wim)
-        b.ksrav(th2, th2, scalar=Q)
+        b.ksrav(th2, th2, scalar=q)
         b.ksubv(hi_re, th1, th2)
         b.kvmul(th1, vdre, wim)
-        b.ksrav(th1, th1, scalar=Q)
+        b.ksrav(th1, th1, scalar=q)
         b.kvmul(th2, vdim, wre)
-        b.ksrav(th2, th2, scalar=Q)
+        b.ksrav(th2, th2, scalar=q)
         b.kaddv(hi_im, th1, th2)
 
     m = n
@@ -228,18 +245,19 @@ def fft_program(x_re: np.ndarray, x_im: np.ndarray) -> KviProgram:
 
     # bit-reversal reorder via element copies (vector length 1)
     nb = int(np.log2(n))
-    out_re = b.vreg("out_re", n)
-    out_im = b.vreg("out_im", n)
+    out_re = vreg("out_re", n)
+    out_im = vreg("out_im", n)
     for i in range(n):
         j = int(f"{i:0{nb}b}"[::-1], 2)
         b.scalar(2)
         b.kvcp(out_re[j], are[i])
         b.kvcp(out_im[j], aim[i])
-    ore = b.mem_out("out_re", n)
-    oim = b.mem_out("out_im", n)
+    ore = b.mem_out("out_re", n, elem_bytes=elem_bytes)
+    oim = b.mem_out("out_im", n, elem_bytes=elem_bytes)
     b.kmemstr(ore, out_re)
     b.kmemstr(oim, out_im)
-    return b.build(alg_ops=10 * (n // 2) * nb, kind="fft", n=n)
+    return b.build(alg_ops=10 * (n // 2) * nb, kind="fft", n=n,
+                   elem_bytes=elem_bytes)
 
 
 def fft_result(res: BackendResult) -> np.ndarray:

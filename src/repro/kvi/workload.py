@@ -238,6 +238,18 @@ class WorkloadResult:
         return {k: v.cycles for k, v in self.timing.items()}
 
     @property
+    def hart_utilization(self) -> Optional[Dict[str, List[Dict[str, float]]]]:
+        """Per-scheme, per-hart busy/stall/idle cycle breakdown (the
+        :class:`~repro.core.simulator.HartStats` accounting, previously
+        discarded here). ``None`` for timing-less backends. Each entry
+        satisfies busy + stall + idle == total (the workload's cycles)."""
+        if self.timing is None:
+            return None
+        return {scheme: [dict(h.breakdown(), utilization=h.utilization)
+                         for h in sim.per_hart]
+                for scheme, sim in self.timing.items()}
+
+    @property
     def outputs(self) -> Tuple[Dict[str, object], ...]:
         return tuple(r.outputs for r in self.entry_results)
 

@@ -1,0 +1,487 @@
+"""Design-space exploration subsystem tests: config validation, space
+enumeration, cost model ordering, Pareto extraction (hypothesis
+properties + hand fixture), sweep driver, and the report checks."""
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import KlessydraConfig, klessydra_taxonomy
+from repro.kvi.dse import (DesignPoint, DesignSpace, build_report,
+                           dominates, front_metrics, hardware_cost,
+                           pareto_front, preflight_point, run_point,
+                           scheme_config, sweep)
+from repro.kvi.programs import conv2d_program, fft_program, matmul_program
+
+# ---------------------------------------------------------------------------
+# KlessydraConfig validation (satellite: degenerate combos rejected)
+# ---------------------------------------------------------------------------
+
+
+class TestConfigValidation:
+    @pytest.mark.parametrize("kw,fieldname", [
+        (dict(M=0), "M"),
+        (dict(M=-2), "M"),
+        (dict(F=0), "F"),
+        (dict(M=3, F=4), "F"),            # F > M: MFUs without SPMIs
+        (dict(M=1, F=2), "F"),
+        (dict(D=3), "D"),                 # not a power of two
+        (dict(D=0), "D"),
+        (dict(D=-4), "D"),
+        (dict(N=0), "N"),
+        (dict(harts=0), "harts"),
+        (dict(spm_kbytes=0), "spm_kbytes"),
+        (dict(spm_kbytes=-1), "spm_kbytes"),
+        (dict(elem_bytes=3), "elem_bytes"),
+        (dict(mem_port_bytes=0), "mem_port_bytes"),
+        (dict(subword_bits=12), "subword_bits"),
+        (dict(fu_counts=(("turbo", 2),)), "fu_counts"),
+        (dict(fu_counts=(("adder", 0),)), "fu_counts"),
+        (dict(fu_counts=(("adder", 1), ("adder", 2))), "fu_counts"),
+    ])
+    def test_degenerate_combo_rejected_naming_field(self, kw, fieldname):
+        with pytest.raises(ValueError, match=fieldname):
+            KlessydraConfig("bad", **kw)
+
+    def test_paper_taxonomy_still_valid(self):
+        # every Table-2 configuration constructs unchanged
+        assert len(klessydra_taxonomy()) == 12
+
+    def test_fu_count_lookup(self):
+        cfg = KlessydraConfig("t", M=3, F=1, D=4,
+                              fu_counts=(("multiplier", 2),))
+        assert cfg.fu_count("multiplier") == 2
+        assert cfg.fu_count("adder") == 1
+
+    def test_capacity_property(self):
+        cfg = KlessydraConfig("t", N=4, spm_kbytes=64)
+        assert cfg.spm_capacity_bytes == 4 * 64 * 1024
+
+    def test_mfu_units_match_isa_enum(self):
+        # configs keep unit names as literals (import-light); they must
+        # track the ISA's Unit enum or cost/fu_counts silently drift
+        from repro.configs.base import MFU_UNITS
+        from repro.core.isa import Unit
+        assert set(MFU_UNITS) == {u.value for u in Unit} - {"lsu"}
+
+
+# ---------------------------------------------------------------------------
+# DesignSpace / DesignPoint
+# ---------------------------------------------------------------------------
+
+
+class TestDesignSpace:
+    def test_default_space_size_and_coverage(self):
+        pts = DesignSpace().points()
+        assert len(pts) == 3 * 4 * 3          # schemes x D x precision
+        assert {p.scheme for p in pts} == \
+            {"shared", "sym_mimd", "het_mimd"}
+        names = [p.name for p in pts]
+        assert len(set(names)) == len(names)  # unique
+
+    def test_enumeration_deterministic(self):
+        a = DesignSpace().points()
+        b = DesignSpace().points()
+        assert [p.name for p in a] == [p.name for p in b]
+
+    @pytest.mark.parametrize("kw", [
+        dict(scheme="shared", M=3, F=3),      # shared must be M=F=1
+        dict(scheme="sym_mimd", M=3, F=1),    # sym must have F=M
+        dict(scheme="het_mimd", M=3, F=3),    # het must have F<M
+        dict(scheme="het_mimd", M=1, F=1),
+        dict(scheme="warp", M=1, F=1),
+        dict(scheme="shared", M=1, F=1, precision_bits=12),
+        dict(scheme="shared", M=1, F=1, D=3),  # config-level validation
+    ])
+    def test_invalid_point_rejected(self, kw):
+        kw.setdefault("D", 4)
+        with pytest.raises(ValueError):
+            DesignPoint(**kw)
+
+    @pytest.mark.parametrize("axis,kw", [
+        ("schemes", dict(schemes=())),
+        ("schemes", dict(schemes=("vliw",))),
+        ("precisions", dict(precisions=(8, 12))),
+        ("replication", dict(replication=(1,))),
+        ("het_fus", dict(het_fus=(0,))),
+        ("lanes", dict(lanes=(6,))),
+        ("spm_kbytes", dict(spm_kbytes=(0,))),
+    ])
+    def test_invalid_axis_rejected_naming_axis(self, axis, kw):
+        with pytest.raises(ValueError, match=axis):
+            DesignSpace(**kw)
+
+    def test_scheme_config_matches_legacy_defaults(self):
+        from repro.kvi.cyclesim import default_schemes
+        legacy = default_schemes(D=8, spm_kbytes=32)
+        for name, cfg in legacy.items():
+            mine = scheme_config(name, D=8, spm_kbytes=32)
+            assert (mine.M, mine.F, mine.D, mine.spm_kbytes) == \
+                (cfg.M, cfg.F, cfg.D, cfg.spm_kbytes), name
+
+    def test_point_config_couples_subword_to_precision(self):
+        pt = DesignPoint("shared", 1, 1, 4, precision_bits=8)
+        assert pt.config().subword_bits == 8
+        pt32 = DesignPoint("shared", 1, 1, 4, precision_bits=32)
+        assert pt32.config().subword_bits == 32
+
+    def test_custom_pipeline_axis_points_survive_dedup(self):
+        # regression: points differing only in a custom pass tuple must
+        # enumerate distinctly (names encode the pipeline)
+        space = DesignSpace(lanes=(4,), precisions=(32,),
+                            pipelines=(None, ("dce",), ()))
+        pts = space.points()
+        assert len(pts) == 3 * 3
+        names = {p.name for p in pts if p.scheme == "shared"}
+        assert any(n.endswith("_pdce") for n in names)
+        assert any(n.endswith("_raw") for n in names)
+
+    def test_preflight_rejects_oversized_workload(self):
+        img = np.arange(1024, dtype=np.int32).reshape(32, 32)
+        filt = np.ones((3, 3), np.int32)
+        prog = conv2d_program(img, filt)
+        tiny = DesignPoint("shared", 1, 1, 4, spm_kbytes=1)
+        # 1 KiB x N=4 cannot hold the 34x34 padded image vreg (4.6 KiB)
+        reason = preflight_point(tiny, [prog])
+        assert reason is not None and "SPM overflow" in reason
+        big = DesignPoint("shared", 1, 1, 4, spm_kbytes=64)
+        assert preflight_point(big, [prog]) is None
+
+
+# ---------------------------------------------------------------------------
+# Cost model: relative orderings the paper's synthesis tables establish
+# ---------------------------------------------------------------------------
+
+
+class TestCostModel:
+    def area(self, scheme, D=4, prec=32):
+        return hardware_cost(
+            DesignPoint(scheme, 1 if scheme == "shared" else 3,
+                        {"shared": 1, "sym_mimd": 3, "het_mimd": 1}[scheme],
+                        D, precision_bits=prec).config()).area_luteq
+
+    def test_scheme_area_ordering(self):
+        for d in (2, 4, 8, 16):
+            shared = self.area("shared", d)
+            het = self.area("het_mimd", d)
+            sym = self.area("sym_mimd", d)
+            assert shared < het < sym, f"D={d}"
+
+    def test_area_grows_with_lanes(self):
+        for scheme in ("shared", "sym_mimd", "het_mimd"):
+            areas = [self.area(scheme, d) for d in (2, 4, 8, 16)]
+            assert areas == sorted(areas) and len(set(areas)) == 4
+
+    def test_subword_support_costs_area(self):
+        assert self.area("shared", 4, prec=8) > \
+            self.area("shared", 4, prec=32)
+
+    def test_fu_replication_costs_area(self):
+        base = DesignPoint("het_mimd", 3, 1, 4).config()
+        more = DesignPoint("het_mimd", 3, 1, 4,
+                           fu_counts=(("multiplier", 2),)).config()
+        assert hardware_cost(more).area_luteq > \
+            hardware_cost(base).area_luteq
+
+    def test_breakdown_covers_total(self):
+        cost = hardware_cost(DesignPoint("sym_mimd", 3, 3, 8).config())
+        assert cost.breakdown.keys() == {"core", "mfu", "spm"}
+        assert sum(cost.breakdown.values()) == \
+            pytest.approx(cost.area_luteq)
+
+    def test_calibration_energy_scale_matches_paper(self):
+        # paper Table 3: T13 Sym MIMD D=8 runs at a few nJ/cycle
+        from repro.kvi.dse.cost import energy_per_cycle_static
+        e = energy_per_cycle_static(
+            DesignPoint("sym_mimd", 3, 3, 8).config())
+        assert 0.5 < e < 10.0
+
+
+# ---------------------------------------------------------------------------
+# Pareto extraction: hand fixture + hypothesis properties
+# ---------------------------------------------------------------------------
+
+# hand-built 5-point fixture over (cycles, area, energy)
+FIXTURE = [
+    (100, 10, 50),    # A: on front (cheapest)
+    (50, 20, 40),     # B: on front
+    (50, 20, 45),     # C: dominated by B (ties cycles/area, worse energy)
+    (20, 40, 60),     # D: on front (fastest)
+    (120, 15, 55),    # E: dominated by A
+]
+FIXTURE_FRONT = {(100, 10, 50), (50, 20, 40), (20, 40, 60)}
+
+
+class TestPareto:
+    def test_dominates_basics(self):
+        assert dominates((1, 1), (2, 2))
+        assert dominates((1, 2), (1, 3))
+        assert not dominates((1, 1), (1, 1))   # ties never dominate
+        assert not dominates((1, 3), (2, 1))
+        with pytest.raises(ValueError):
+            dominates((1,), (1, 2))
+
+    def test_hand_fixture(self):
+        front = pareto_front(FIXTURE)
+        assert set(front) == FIXTURE_FRONT
+        assert front_metrics(FIXTURE) == sorted(FIXTURE_FRONT)
+
+    def test_front_preserves_input_order(self):
+        front = pareto_front(FIXTURE)
+        assert front == [p for p in FIXTURE if p in FIXTURE_FRONT]
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30),
+                              st.integers(0, 30)),
+                    min_size=1, max_size=24),
+           st.randoms(use_true_random=False))
+    def test_no_front_point_dominated_and_invariance(self, pts, rnd):
+        front = front_metrics(pts)
+        # no swept point dominates any front point
+        for f in front:
+            assert not any(dominates(p, f) for p in pts)
+        # every non-front point is dominated by someone
+        for p in set(map(tuple, pts)) - set(front):
+            assert any(dominates(q, p) for q in pts)
+        # invariance under duplication + permutation
+        doubled = list(pts) + list(pts)
+        rnd.shuffle(doubled)
+        assert front_metrics(doubled) == front
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver + report (tiny kernels so the whole class runs in seconds)
+# ---------------------------------------------------------------------------
+
+
+def tiny_kernels(precision_bits: int):
+    eb = precision_bits // 8
+    rng = np.random.default_rng(7)
+    img = rng.integers(-8, 8, (8, 8)).astype(np.int32)
+    filt = rng.integers(-4, 4, (3, 3)).astype(np.int32)
+    A = rng.integers(-4, 4, (8, 8)).astype(np.int32)
+    B = rng.integers(-4, 4, (8, 8)).astype(np.int32)
+    return {
+        "conv": conv2d_program(img, filt, shift=2, elem_bytes=eb),
+        "fft": fft_program(rng.integers(-64, 64, 32).astype(np.int32),
+                           rng.integers(-64, 64, 32).astype(np.int32),
+                           elem_bytes=eb),
+        "matmul": matmul_program(A, B, shift=2, resident=True,
+                                 elem_bytes=eb),
+    }
+
+
+TINY_SPACE = DesignSpace(lanes=(2, 8), precisions=(8, 32))
+
+
+@pytest.fixture(scope="module")
+def tiny_sweep():
+    return sweep(TINY_SPACE, tiny_kernels, max_workers=1)
+
+
+class TestSweep:
+    def test_records_in_enumeration_order(self, tiny_sweep):
+        assert [r.point.name for r in tiny_sweep.records] == \
+            [p.name for p in TINY_SPACE.points()]
+        assert tiny_sweep.meta["n_points"] == 12
+        assert all(r.ok for r in tiny_sweep.records)
+
+    def test_parallel_sweep_is_deterministic(self, tiny_sweep):
+        par = sweep(TINY_SPACE, tiny_kernels, max_workers=4)
+        for a, b in zip(tiny_sweep.records, par.records):
+            assert a.point.name == b.point.name
+            for k in a.kernels:
+                assert a.kernels[k]["cycles"] == b.kernels[k]["cycles"]
+
+    def test_paper_scheme_cycle_ordering(self, tiny_sweep):
+        by_name = {r.point.name: r for r in tiny_sweep.records}
+        for d in (2, 8):
+            for prec in (8, 32):
+                def cyc(scheme, mf):
+                    return by_name[
+                        f"{scheme}_M{mf[0]}F{mf[1]}_D{d}_b{prec}"
+                        f"_spm64"].kernels["conv"]["cycles"]
+                sym = cyc("sym_mimd", (3, 3))
+                het = cyc("het_mimd", (3, 1))
+                shared = cyc("shared", (1, 1))
+                assert sym <= het <= shared
+
+    def test_subword_cuts_cycles(self, tiny_sweep):
+        by_name = {r.point.name: r for r in tiny_sweep.records}
+        for kern in ("conv", "matmul"):
+            c32 = by_name["shared_M1F1_D2_b32_spm64"].kernels[
+                kern]["cycles"]
+            c8 = by_name["shared_M1F1_D2_b8_spm64"].kernels[
+                kern]["cycles"]
+            assert c8 < c32
+
+    def test_utilization_breakdown_sums_to_total(self, tiny_sweep):
+        # per-hart busy + stall + idle == workload cycles, every point
+        for r in tiny_sweep.records:
+            for kern, k in r.kernels.items():
+                for h in k["hart_utilization"]:
+                    assert (h["busy"] + h["stall"] + h["idle"]
+                            == k["cycles"]), (r.point.name, kern)
+                    assert h["busy"] >= 0 and h["stall"] >= 0 \
+                        and h["idle"] >= 0
+
+    def test_incompatible_point_recorded_not_raised(self):
+        def big_kernels(precision_bits):
+            img = np.arange(1024, dtype=np.int32).reshape(32, 32)
+            return {"conv": conv2d_program(img, np.ones((3, 3), np.int32),
+                                           elem_bytes=4)}
+        pts = [DesignPoint("shared", 1, 1, 4, spm_kbytes=1,
+                           precision_bits=32)]
+        res = sweep(pts, big_kernels, max_workers=1)
+        assert res.records[0].status == "incompatible"
+        assert "SPM overflow" in res.records[0].reason
+
+    def test_chaining_point_not_slower(self):
+        base = DesignPoint("shared", 1, 1, 4)
+        chained = DesignPoint("shared", 1, 1, 4, chaining=True)
+        res = sweep([base, chained], tiny_kernels, max_workers=1)
+        a, b = res.records
+        assert b.kernels["conv"]["cycles"] <= \
+            a.kernels["conv"]["cycles"]
+
+    def test_raw_passes_point_differs(self):
+        opt = DesignPoint("shared", 1, 1, 4)
+        raw = DesignPoint("shared", 1, 1, 4, passes=())
+        res = sweep([opt, raw], tiny_kernels, max_workers=1)
+        assert res.records[1].point.name.endswith("_raw")
+        # fft carries kvcp bit-reversal the pipeline optimizes away
+        assert res.records[0].kernels["fft"]["cycles"] <= \
+            res.records[1].kernels["fft"]["cycles"]
+
+    def test_json_csv_roundtrip(self, tiny_sweep, tmp_path):
+        jpath = tmp_path / "sweep.json"
+        cpath = tmp_path / "sweep.csv"
+        tiny_sweep.save_json(str(jpath))
+        tiny_sweep.save_csv(str(cpath))
+        data = json.loads(jpath.read_text())
+        assert len(data["points"]) == len(tiny_sweep.records)
+        assert data["kernels"] == ["conv", "fft", "matmul"]
+        header = cpath.read_text().splitlines()[0]
+        assert "cycles" in header and "area_luteq" in header
+        # one csv row per ok point x (kernels + composite)
+        assert len(cpath.read_text().splitlines()) == 1 + 12 * 4
+
+    def test_matched_group_checks_are_not_vacuous(self, tiny_sweep):
+        # regression: shared (M=1) must land in the same matched group
+        # as the MIMD schemes or the ordering checks never execute
+        from repro.kvi.dse.report import scheme_ordering_checks
+        checks = scheme_ordering_checks(tiny_sweep.ok_records, "conv")
+        assert checks["n_matched_groups"] == 4     # 2 lanes x 2 precs
+
+    def test_matched_group_check_catches_violations(self):
+        # fabricate records where shared is fastest: the matched-group
+        # check must fail, not pass vacuously
+        from repro.kvi.dse.report import scheme_ordering_checks
+        from repro.kvi.dse.sweep import PointRecord
+        from repro.kvi.dse.cost import hardware_cost
+
+        def fake(scheme, m, f, cycles):
+            pt = DesignPoint(scheme, m, f, 4, precision_bits=32)
+            rec = PointRecord(pt, "ok",
+                              area=hardware_cost(pt.config()))
+            rec.kernels["conv"] = {"cycles": cycles,
+                                   "energy_nj": float(cycles)}
+            return rec
+        recs = [fake("shared", 1, 1, 100), fake("sym_mimd", 3, 3, 200),
+                fake("het_mimd", 3, 1, 150)]
+        checks = scheme_ordering_checks(recs, "conv")
+        assert checks["n_matched_groups"] == 1
+        assert not checks["sym_fastest_matched_groups"]
+
+    def test_preflight_runs_on_optimized_programs(self):
+        # a program that only fits the SPM after dce (huge dead vreg)
+        # must be a VALID point under the default pipeline and an
+        # incompatible one with passes=()
+        from repro.kvi.ir import KviProgramBuilder
+
+        def dead_heavy(precision_bits):
+            b = KviProgramBuilder("dead_heavy")
+            x = np.arange(64, dtype=np.int32)
+            v = b.vreg("v", 64)
+            dead = b.vreg("dead", 2048)       # 8 KiB, never observed
+            b.kmemld(v, b.mem_in("x", x))
+            b.ksvaddsc(dead, dead, scalar=1)
+            b.krelu(v, v)
+            b.kmemstr(b.mem_out("y", 64), v)
+            return {"k": b.build()}
+
+        opt = DesignPoint("shared", 1, 1, 4, spm_kbytes=1)
+        raw = DesignPoint("shared", 1, 1, 4, spm_kbytes=1, passes=())
+        res = sweep([opt, raw], dead_heavy, max_workers=1,
+                    composite=False)
+        assert res.records[0].status == "ok"
+        assert res.records[1].status == "incompatible"
+
+    def test_report_checks_pass_on_tiny_space(self, tiny_sweep):
+        report = build_report(tiny_sweep, subword_min_speedup=1.2)
+        checks = report["checks"]
+        assert checks["all_schemes_covered"]
+        assert checks["pareto_ordering_ok"]
+        assert checks["subword_2x_on_mfu_bound"]
+        for kern in ("conv", "fft", "matmul", "composite"):
+            assert kern in report["kernels"]
+            front = report["kernels"][kern]["front"]
+            assert front, kern
+            schemes_on_front = {row["scheme"] for row in front}
+            assert "het_mimd" in schemes_on_front or \
+                len(schemes_on_front) >= 2
+
+    def test_run_point_composite_pins_kernels_to_harts(self):
+        rec = run_point(DesignPoint("sym_mimd", 3, 3, 4),
+                        tiny_kernels(32))
+        assert rec.composite is not None
+        assert rec.composite["cycles"] > 0
+        # composite runs all three kernels concurrently: faster than
+        # the sum of the homogeneous runs on the same machine
+        assert rec.composite["cycles"] < sum(
+            k["cycles"] for k in rec.kernels.values())
+
+
+
+# ---------------------------------------------------------------------------
+# Multi-instance FU contention (fu_counts through the simulator)
+# ---------------------------------------------------------------------------
+
+
+class TestFuCounts:
+    def test_replicated_multiplier_helps_het_mimd(self):
+        # het-MIMD shares one MFU: three harts fighting for the single
+        # multiplier serialize; a second instance relieves exactly that
+        base = DesignPoint("het_mimd", 3, 1, 4)
+        dual = DesignPoint("het_mimd", 3, 1, 4,
+                           fu_counts=(("multiplier", 3),))
+        res = sweep([base, dual], tiny_kernels, max_workers=1)
+        a, b = res.records
+        assert b.kernels["matmul"]["cycles"] <= \
+            a.kernels["matmul"]["cycles"]
+
+    def test_het_second_mfu_is_modeled_not_just_billed(self):
+        # regression: het F=2 must contribute real unit instances in the
+        # simulator (not only F x area in the cost model)
+        f1 = DesignPoint("het_mimd", 3, 1, 4)
+        f2 = DesignPoint("het_mimd", 3, 2, 4)
+        res = sweep([f1, f2], tiny_kernels, max_workers=1)
+        a, b = res.records
+        assert b.area.area_luteq > a.area.area_luteq
+        assert b.kernels["matmul"]["cycles"] < \
+            a.kernels["matmul"]["cycles"]
+
+    def test_empty_sweep_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            sweep([], tiny_kernels, max_workers=1)
+
+    def test_speedup_curves_keep_spm_series_apart(self):
+        from repro.kvi.dse.report import speedup_vs_lanes
+        pts = [DesignPoint("shared", 1, 1, d, precision_bits=32,
+                           spm_kbytes=s)
+               for s in (32, 64) for d in (2, 8)]
+        res = sweep(pts, tiny_kernels, max_workers=1)
+        curves = speedup_vs_lanes(res.ok_records, "conv")
+        assert len(curves) == 2           # one series per spm size
+        assert all(set(c) == {"D2", "D8"} for c in curves.values())

@@ -349,3 +349,39 @@ class TestDeprecationShims:
             prog = build_conv2d(cfg, img, filt)
             prog.builder.run_functional()
         assert conv2d_result(prog, 4).shape == (4, 4)
+
+
+class TestHartUtilization:
+    """The per-hart busy/stall/idle breakdown surfaced from HartStats
+    through SimResult into WorkloadResult (previously discarded)."""
+
+    def test_breakdown_sums_to_total_cycles(self, rng):
+        wl = _small_composite(rng)
+        res = CycleSimBackend().run_workload(wl, functional=False)
+        util = res.hart_utilization
+        assert util is not None and set(util) == set(res.cycles)
+        for scheme, harts in util.items():
+            total = res.cycles[scheme]
+            for h in harts:
+                assert h["busy"] + h["stall"] + h["idle"] == total, scheme
+                assert h["busy"] >= 0 and h["stall"] >= 0 \
+                    and h["idle"] >= 0
+                assert h["total"] == total
+                assert h["utilization"] == pytest.approx(
+                    h["busy"] / max(total, 1))
+
+    def test_contended_scheme_stalls_more(self, rng):
+        """The shared scheme's single MFU serializes three harts — they
+        must spend at least as many stall cycles as under sym-MIMD."""
+        prog, _ = _saxpy(0, n=64)
+        wl = KviWorkload.replicate(prog, 3)
+        res = CycleSimBackend().run_workload(wl, functional=False)
+        util = res.hart_utilization
+        stall = {s: sum(h["stall"] for h in hs)
+                 for s, hs in util.items()}
+        assert stall["sym_mimd"] <= stall["shared"]
+
+    def test_timingless_backend_returns_none(self, rng):
+        prog, _ = _saxpy(1)
+        res = get_backend("oracle").run_workload(KviWorkload.single(prog))
+        assert res.hart_utilization is None
