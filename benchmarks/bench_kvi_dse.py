@@ -7,8 +7,15 @@ composite workload) and emits ``BENCH_kvi_dse.json`` — per-point cycles
 the acceptance checks (sym-MIMD fastest, shared cheapest, het-MIMD on
 the front between them; 8-bit >= 2x on the MFU-bound kernels).
 
+``--executor`` selects the sweep executor, ``--measure-pallas`` adds
+the real-walltime axis, and ``--check`` additionally regresses the
+cost model's CALIBRATION constants against the paper's Table 3
+energies (``repro.kvi.dse.cost.calibration_fit``), failing when the
+relative fit error exceeds the documented threshold.
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_kvi_dse [--smoke]
-          [--seed N] [--out PATH]
+          [--seed N] [--out PATH] [--executor NAME] [--measure-pallas]
+          [--check]
 or through the harness:  python -m benchmarks.run --only kvi_dse
 """
 from __future__ import annotations
@@ -18,12 +25,20 @@ import json
 import sys
 
 
-def run(emit, smoke: bool = False, seed: int = 0) -> dict:
+def run(emit, smoke: bool = False, seed: int = 0,
+        executor: str = None, measure_pallas: bool = False) -> dict:
+    from repro.kvi.dse.cost import calibration_fit
     from repro.kvi.dse.report import run_dse
-    result, report = run_dse(smoke=smoke, seed=seed, emit=emit)
+    result, report = run_dse(smoke=smoke, seed=seed, emit=emit,
+                             executor=executor,
+                             measure_pallas=measure_pallas)
+    report["calibration_fit"] = calibration_fit()
     emit("# --- checks ---")
     for k, v in report["checks"].items():
         emit(f"{k} = {v}")
+    fit = report["calibration_fit"]
+    emit(f"calibration_fit: max_rel_err={fit['max_rel_err']} "
+         f"(threshold {fit['threshold']}) ok={fit['ok']}")
     for kern, data in report["kernels"].items():
         emit(f"{kern}: front={len(data['front'])} points, "
              f"subword_max={data['subword']['max_speedup']}x")
@@ -39,12 +54,50 @@ def main(argv=None) -> int:
                     help="small kernels + default axes (CI fast job)")
     ap.add_argument("--seed", type=int, default=0,
                     help="kernel input data seed (reproducible inputs)")
+    ap.add_argument("--executor", default=None,
+                    choices=("serial", "thread", "process"),
+                    help="sweep executor (default: threads)")
+    ap.add_argument("--measure-pallas", action="store_true",
+                    help="add the Pallas walltime axis per point")
+    ap.add_argument("--check", action="store_true",
+                    help="also fail when the CALIBRATION constants no "
+                         "longer fit the paper's Table 3 energies")
+    ap.add_argument("--check-only", action="store_true",
+                    help="run ONLY the calibration-fit gate (closed-"
+                         "form over published Table 3 rows — no sweep) "
+                         "and write its result to --out")
     args = ap.parse_args(argv)
-    result = run(emit=print, smoke=args.smoke, seed=args.seed)
+    if args.check_only:
+        from repro.kvi.dse.cost import calibration_fit
+        fit = calibration_fit()
+        print(f"calibration_fit: max_rel_err={fit['max_rel_err']} "
+              f"(threshold {fit['threshold']}) ok={fit['ok']}")
+        with open(args.out, "w") as f:
+            json.dump({"calibration_fit": fit}, f, indent=2,
+                      sort_keys=True)
+        print(f"# wrote {args.out}")
+        if not fit["ok"]:                # explicit: survives python -O
+            print(f"# FAILED: CALIBRATION drifted out of the paper's "
+                  f"Table-3 energy regime: max relative fit error "
+                  f"{fit['max_rel_err']} > threshold "
+                  f"{fit['threshold']}", file=sys.stderr)
+            return 1
+        return 0
+    result = run(emit=print, smoke=args.smoke, seed=args.seed,
+                 executor=args.executor,
+                 measure_pallas=args.measure_pallas)
     checks = result["checks"]
     assert checks["all_schemes_covered"], "a scheme produced no points"
     assert checks["pareto_ordering_ok"], "paper scheme ordering broken"
     assert checks["subword_2x_on_mfu_bound"], "sub-word speedup < 2x"
+    if args.check:
+        fit = result["calibration_fit"]
+        if not fit["ok"]:                # explicit: survives python -O
+            print(f"# FAILED: CALIBRATION drifted out of the paper's "
+                  f"Table-3 energy regime: max relative fit error "
+                  f"{fit['max_rel_err']} > threshold "
+                  f"{fit['threshold']}", file=sys.stderr)
+            return 1
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}")

@@ -83,6 +83,16 @@ class BackendBase:
     disables optimization entirely, and a sequence of pass names or
     callables runs a custom pipeline. Every built-in backend ctor
     forwards a ``passes=`` keyword here.
+
+    Lowering backends may additionally accept a
+    :class:`~repro.kvi.lowering.TraceCache` (``trace_cache=`` on the
+    cyclesim ctor) so callers running one program set through several
+    workloads — the DSE sweep's preflight + homogeneous + composite
+    protocols — bind each (program, config) pair exactly once. The
+    cache keys on program *identity*, so pair it with ``passes=()``
+    and pre-optimized programs: an active pipeline rewrites programs
+    into fresh objects on every ``run_workload()``, which would turn
+    every lookup into a miss (and pin each rewritten program alive).
     """
 
     passes = None                    # None => default pipeline; () => off

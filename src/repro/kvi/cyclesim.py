@@ -28,7 +28,7 @@ from repro.configs.base import KlessydraConfig
 from repro.core.simulator import SimResult, simulate
 from repro.kvi.backend import (BackendBase, BackendResult, register_backend)
 from repro.kvi.ir import KviProgram
-from repro.kvi.lowering import lower
+from repro.kvi.lowering import TraceCache, lower
 from repro.kvi.workload import (KviWorkload, WorkloadResult,
                                 dedup_entry_outputs)
 
@@ -52,7 +52,8 @@ class CycleSimBackend(BackendBase):
     def __init__(self,
                  schemes: Optional[Dict[str, KlessydraConfig]] = None,
                  replicate_harts: bool = True,
-                 passes=None, chaining: bool = False):
+                 passes=None, chaining: bool = False,
+                 trace_cache: Optional[TraceCache] = None):
         self.schemes = schemes or default_schemes()
         self.replicate_harts = replicate_harts
         self.passes = passes
@@ -62,6 +63,11 @@ class CycleSimBackend(BackendBase):
         # stay the legacy ones; needs the fuse_regions pass to plan the
         # regions (no effect with passes=()).
         self.chaining = chaining
+        # shared LoweredTrace cache: callers running one program set
+        # through several workloads (the DSE sweep's preflight +
+        # homogeneous + composite protocols) pass a TraceCache so the
+        # SPM allocator runs once per (program, config), not per run
+        self.trace_cache = trace_cache
 
     def run(self, program: KviProgram) -> BackendResult:
         """Single-program protocol: replicate on all harts (the paper's
@@ -86,14 +92,19 @@ class CycleSimBackend(BackendBase):
         timing: Dict[str, SimResult] = {}
         entry_outputs = None if functional else \
             [{} for _ in workload.entries]
+        lower_fn = self.trace_cache.lower if self.trace_cache is not None \
+            else lower
         for scheme, cfg in self.schemes.items():
             # lower each distinct program once per scheme (entries often
-            # share program objects, e.g. the replicated protocol)
+            # share program objects, e.g. the replicated protocol);
+            # timing-only runs skip the mem_init buffer copies, and a
+            # TraceCache shares the whole trace across run protocols
             traces = {}
             for e in workload.entries:
                 if id(e.program) not in traces:
-                    traces[id(e.program)] = lower(e.program, cfg,
-                                                  chaining=self.chaining)
+                    traces[id(e.program)] = lower_fn(
+                        e.program, cfg, chaining=self.chaining,
+                        functional=functional)
             if entry_outputs is None:
                 # functional values: same trace + Mfu path as the oracle
                 # (shared dedup/copy semantics in dedup_entry_outputs),

@@ -20,21 +20,29 @@ CLI::
     PYTHONPATH=src python -m repro.kvi.dse --smoke   # CI-sized sweep
     PYTHONPATH=src python -m repro.kvi.dse           # paper-scale sweep
 """
-from repro.kvi.dse.cost import (CALIBRATION, HardwareCost, energy_model,
-                                hardware_cost)
+from repro.kvi.dse.cost import (CALIBRATION, CALIBRATION_FIT_MAX_REL_ERR,
+                                HardwareCost, calibration_fit,
+                                energy_model, hardware_cost)
+from repro.kvi.dse.executors import (EXECUTORS, PointJob, ProcessExecutor,
+                                     SerialExecutor, SweepExecutor,
+                                     ThreadExecutor, make_executor)
 from repro.kvi.dse.pareto import dominates, front_metrics, pareto_front
 from repro.kvi.dse.report import (build_report, full_space, render_markdown,
                                   run_dse, smoke_space)
 from repro.kvi.dse.space import (SCHEMES, DesignPoint, DesignSpace,
                                  preflight_point, scheme_config)
 from repro.kvi.dse.sweep import (PointRecord, SweepResult,
+                                 measure_pallas_points,
                                  paper_kernel_factory, run_point, sweep)
 
 __all__ = [
-    "CALIBRATION", "HardwareCost", "energy_model", "hardware_cost",
+    "CALIBRATION", "CALIBRATION_FIT_MAX_REL_ERR", "HardwareCost",
+    "calibration_fit", "energy_model", "hardware_cost",
+    "EXECUTORS", "PointJob", "ProcessExecutor", "SerialExecutor",
+    "SweepExecutor", "ThreadExecutor", "make_executor",
     "dominates", "front_metrics", "pareto_front", "build_report",
     "full_space", "render_markdown", "run_dse", "smoke_space", "SCHEMES",
     "DesignPoint", "DesignSpace", "preflight_point", "scheme_config",
-    "PointRecord", "SweepResult",
+    "PointRecord", "SweepResult", "measure_pallas_points",
     "paper_kernel_factory", "run_point", "sweep",
 ]

@@ -5,6 +5,12 @@ artifacts (``dse_sweep.json``, ``dse_sweep.csv``, ``dse_report.md``,
 ``BENCH_kvi_dse.json``) and exits non-zero when any acceptance check
 fails (all schemes covered, Pareto scheme ordering, sub-word >= 2x on
 the MFU-bound kernels).
+
+``--executor {serial,thread,process}`` selects the sweep executor
+(process = real multi-core speedup past the GIL; all three produce
+identical canonical results). ``--measure-pallas`` adds the walltime
+axis: each point's programs also run through ``PallasBackend`` and the
+artifacts gain walltime + compiled-``pallas_call``-count columns.
 """
 from __future__ import annotations
 
@@ -16,25 +22,48 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.kvi.dse")
     ap.add_argument("--smoke", action="store_true",
                     help="small kernels + default axes (CI-sized, <60s)")
+    ap.add_argument("--full", action="store_true",
+                    help="explicit paper-scale sweep (the default when "
+                         "--smoke is absent): adds the chaining and "
+                         "fu_counts axes")
     ap.add_argument("--out-dir", default=".",
                     help="where to write sweep/report artifacts")
     ap.add_argument("--seed", type=int, default=0,
                     help="kernel input data seed (reproducible BENCH)")
     ap.add_argument("--jobs", type=int, default=4,
-                    help="sweep thread-pool width")
+                    help="sweep worker count (threads or processes)")
+    ap.add_argument("--executor", default=None,
+                    choices=("serial", "thread", "process"),
+                    help="sweep executor (default: thread when --jobs "
+                         "> 1, else serial)")
+    ap.add_argument("--measure-pallas", action="store_true",
+                    help="also measure real Pallas walltime + "
+                         "pallas_call counts per point (one execution "
+                         "per precision/pipeline class)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-point progress lines")
     args = ap.parse_args(argv)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
 
     from repro.kvi.dse.report import run_dse
     emit = (lambda s: None) if args.quiet else print
     result, report = run_dse(smoke=args.smoke, seed=args.seed,
                              emit=emit, out_dir=args.out_dir,
-                             max_workers=args.jobs)
+                             max_workers=args.jobs,
+                             executor=args.executor,
+                             measure_pallas=args.measure_pallas)
 
-    print(f"\n# swept {report['meta']['n_points']} points "
-          f"({report['meta']['n_ok']} ok) in "
-          f"{report['meta']['total_wall_s']}s")
+    meta = report["meta"]
+    print(f"\n# swept {meta['n_points']} points "
+          f"({meta['n_ok']} ok) in {meta['total_wall_s']}s "
+          f"[executor={meta['executor']}, lowering cache "
+          f"{meta['lowering']['hits']} hits / "
+          f"{meta['lowering']['misses']} misses]")
+    if "pallas" in meta:
+        print(f"# pallas walltime: {meta['pallas']['n_measured_points']} "
+              f"points in {meta['pallas']['n_measurement_classes']} "
+              f"measurement classes")
     failed = [k for k, v in report["checks"].items()
               if isinstance(v, bool) and not v]
     for k, v in report["checks"].items():

@@ -25,7 +25,9 @@ single knob future synthesis-data calibration should touch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional
+
+import numpy as np
 
 from repro.configs.base import MFU_UNITS, KlessydraConfig
 
@@ -161,6 +163,79 @@ def energy_per_cycle_static(cfg: KlessydraConfig) -> float:
     return (c["core_nj_per_cycle"]
             + c["static_nj_per_cycle_per_kluteq"]
             * hardware_cost(cfg).area_luteq / 1000.0)
+
+
+#: Calibration-fit gate: maximum per-row relative error of the model's
+#: nJ/cycle against the paper's Table 3 measured energies, after the
+#: two-parameter dynamic-energy regression below. The current
+#: CALIBRATION table fits within ~15%; 0.25 leaves headroom for future
+#: retuning without letting the model drift into a different energy
+#: regime (2x would mean the static/dynamic split is wrong, not noisy).
+CALIBRATION_FIT_MAX_REL_ERR = 0.25
+
+#: Table 3 row label -> the (M, F) of the scheme it measures.
+_TABLE3_SCHEMES = {"T13 SIMD": (1, 1), "T13 Sym MIMD": (3, 3),
+                   "T13 Het MIMD": (3, 1)}
+
+
+def calibration_fit(table3: Optional[Dict] = None) -> Dict[str, object]:
+    """Regress the energy model against the paper's Table 3 energies.
+
+    Every T13 row of Table 3 gives a measured energy-per-cycle at one
+    (scheme, D) operating point: ``E_uJ / kcycles`` nJ/cycle. The model
+    predicts ``energy_per_cycle_static(cfg)`` (area-proportional, fully
+    determined by :data:`CALIBRATION`) plus a dynamic term the paper's
+    table cannot pin per-component — so the dynamic part is regressed
+    here as the least-squares line ``a*D + b`` over the residuals
+    (``a`` absorbs the lane-count-weighted MFU stream, ``b`` the LSU
+    and issue overhead), exactly the shape of
+    :func:`energy_model`'s dynamic terms.
+
+    Returns per-row observed/predicted nJ/cycle with relative errors,
+    the fitted ``(a, b)``, and ``ok`` — False when ``max_rel_err``
+    exceeds :data:`CALIBRATION_FIT_MAX_REL_ERR` (the bench ``--check``
+    gate). A failing fit means the CALIBRATION constants have drifted
+    out of the paper's energy regime, not that a run was noisy: every
+    input here is a published table value."""
+    if table3 is None:
+        # deferred: benchmarks/ is a sibling top-level package, present
+        # when running from the repo root (tests, CI, the bench harness)
+        from benchmarks.paper_data import TABLE3_FILTERS
+        table3 = TABLE3_FILTERS
+    rows = []
+    for (label, D), by_order in sorted(table3.items()):
+        mf = _TABLE3_SCHEMES.get(label)
+        if mf is None:                   # baseline cores: no coprocessor
+            continue
+        cfg = KlessydraConfig(f"{label} D={D}", M=mf[0], F=mf[1], D=D)
+        static = energy_per_cycle_static(cfg)
+        for order, (kcycles, _t_us, e_uj) in sorted(by_order.items()):
+            rows.append({"scheme": label, "D": D, "filter_order": order,
+                         "observed_nj_per_cycle": e_uj / kcycles,
+                         "static_nj_per_cycle": static})
+    resid = np.array([r["observed_nj_per_cycle"]
+                      - r["static_nj_per_cycle"] for r in rows])
+    lanes = np.array([[r["D"], 1.0] for r in rows])
+    (a, b), *_ = np.linalg.lstsq(lanes, resid, rcond=None)
+    rel_errs = []
+    for r in rows:
+        pred = float(r["static_nj_per_cycle"] + a * r["D"] + b)
+        r["predicted_nj_per_cycle"] = round(pred, 4)
+        r["rel_err"] = round(
+            abs(pred - r["observed_nj_per_cycle"])
+            / r["observed_nj_per_cycle"], 4)
+        r["observed_nj_per_cycle"] = round(
+            r["observed_nj_per_cycle"], 4)
+        r["static_nj_per_cycle"] = round(r["static_nj_per_cycle"], 4)
+        rel_errs.append(r["rel_err"])
+    max_err = max(rel_errs)
+    return {"rows": rows,
+            "dyn_nj_per_lane_cycle": round(float(a), 5),
+            "dyn_nj_per_cycle_base": round(float(b), 5),
+            "max_rel_err": round(max_err, 4),
+            "mean_rel_err": round(float(np.mean(rel_errs)), 4),
+            "threshold": CALIBRATION_FIT_MAX_REL_ERR,
+            "ok": bool(max_err <= CALIBRATION_FIT_MAX_REL_ERR)}
 
 
 def energy_model(cfg: KlessydraConfig, sim) -> Dict[str, float]:

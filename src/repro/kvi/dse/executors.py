@@ -1,0 +1,139 @@
+"""Pluggable sweep executors: how design points fan out over compute.
+
+The sweep driver (:mod:`repro.kvi.dse.sweep`) hands every executor the
+same list of :class:`PointJob` units — a design point plus the
+pre-optimized kernel programs it should run — and expects the matching
+:class:`~repro.kvi.dse.sweep.PointRecord` list back **in job order**.
+Because each job is independent and the merge is order-preserving, every
+executor produces identical results; ``SweepResult.canonical_json()``
+byte-equality across executors is pinned by tests.
+
+  * :class:`SerialExecutor`  — in-process, one job at a time. The
+    reference semantics everything else must match.
+  * :class:`ThreadExecutor`  — in-process thread pool. Cheap to start,
+    shares the optimized-program cache by reference, but the cyclesim
+    inner loop is pure Python so the GIL caps real speedup.
+  * :class:`ProcessExecutor` — a ``spawn`` process pool. Jobs (points +
+    programs — all plain dataclasses and numpy buffers) are pickled to
+    the workers and records pickled back; each worker builds its own
+    per-point :class:`~repro.kvi.lowering.TraceCache`, so cache counters
+    are deterministic and identical to serial execution. This is the
+    executor that actually scales the paper-sized space on multi-core
+    hosts.
+
+``spawn`` (not ``fork``) is used deliberately: the parent may have jax
+initialized (the Pallas walltime stage, the benchmark harness), and
+forking a jax-bearing process is a documented deadlock hazard. Workers
+never import jax — the Pallas stage runs in the parent after the
+fan-out.
+"""
+from __future__ import annotations
+
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, List, Sequence, Union
+
+from repro.kvi.dse.space import DesignPoint
+from repro.kvi.ir import KviProgram
+
+if TYPE_CHECKING:                      # pragma: no cover - typing only
+    from repro.kvi.dse.sweep import PointRecord
+
+
+@dataclass(frozen=True)
+class PointJob:
+    """One unit of sweep work: a design point plus the kernel programs
+    (already run through the point's pass pipeline) it executes. Fully
+    picklable — the :class:`ProcessExecutor` serializes jobs verbatim."""
+
+    point: DesignPoint
+    kernels: Dict[str, KviProgram]
+    composite: bool = True
+
+
+def run_job(job: PointJob) -> "PointRecord":
+    """Execute one job. Module-level so process pools can pickle it by
+    reference; the import is deferred to dodge the sweep<->executor
+    module cycle."""
+    from repro.kvi.dse.sweep import run_point
+    return run_point(job.point, job.kernels, composite=job.composite,
+                     preoptimized=True)
+
+
+class SweepExecutor:
+    """Protocol: map jobs to records, order-preserving."""
+
+    name = "base"
+
+    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+        raise NotImplementedError
+
+
+class SerialExecutor(SweepExecutor):
+    """One job at a time in the calling thread — the reference order."""
+
+    name = "serial"
+
+    def __init__(self, max_workers: int = 1):
+        del max_workers                  # uniform ctor across executors
+
+    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+        return [run_job(j) for j in jobs]
+
+
+class ThreadExecutor(SweepExecutor):
+    """In-process thread pool (the pre-executor sweep behavior)."""
+
+    name = "thread"
+
+    def __init__(self, max_workers: int = 4):
+        self.max_workers = max(1, max_workers)
+
+    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+        with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
+            return list(ex.map(run_job, jobs))
+
+
+class ProcessExecutor(SweepExecutor):
+    """``spawn`` process pool: real multi-core speedup past the GIL.
+
+    ``ex.map`` yields results in submission order, so the merged record
+    list is deterministic and identical to :class:`SerialExecutor` —
+    per-point trace-cache counters included, since every worker runs the
+    same per-point ``run_point`` code on the same pickled programs."""
+
+    name = "process"
+
+    def __init__(self, max_workers: int = 4):
+        self.max_workers = max(1, max_workers)
+
+    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+        ctx = multiprocessing.get_context("spawn")
+        # chunk so each worker amortizes its interpreter start over
+        # several points instead of one round-trip per point
+        chunk = max(1, len(jobs) // (self.max_workers * 4))
+        with ProcessPoolExecutor(max_workers=self.max_workers,
+                                 mp_context=ctx) as ex:
+            return list(ex.map(run_job, jobs, chunksize=chunk))
+
+
+EXECUTORS = {cls.name: cls
+             for cls in (SerialExecutor, ThreadExecutor, ProcessExecutor)}
+
+
+def make_executor(spec: Union[str, SweepExecutor, None],
+                  max_workers: int = 4) -> SweepExecutor:
+    """Resolve an executor: an instance passes through, a name
+    instantiates from the registry, ``None`` keeps the legacy behavior
+    (threads when ``max_workers > 1``, else serial)."""
+    if isinstance(spec, SweepExecutor):
+        return spec
+    if spec is None:
+        spec = "thread" if max_workers and max_workers > 1 else "serial"
+    try:
+        cls = EXECUTORS[spec]
+    except KeyError:
+        raise ValueError(f"unknown sweep executor {spec!r}; available: "
+                         f"{sorted(EXECUTORS)}") from None
+    return cls(max_workers=max_workers)

@@ -173,6 +173,58 @@ def scheme_ordering_checks(records: List[PointRecord], kernel: str,
     }
 
 
+def hart_utilization_by_scheme(records: List[PointRecord], kernel: str,
+                               ) -> Dict[str, Dict[str, object]]:
+    """Per scheme, the per-hart busy/stall/idle breakdown of that
+    scheme's fastest default-pipeline point on ``kernel`` — the record
+    that explains *why* het-MIMD tracks sym-MIMD (its harts stall on the
+    shared MFU instead of idling). Deterministic representative: lowest
+    cycles, then point name."""
+    out: Dict[str, Dict[str, object]] = {}
+    for scheme in ("shared", "sym_mimd", "het_mimd"):
+        cands = [r for r in records
+                 if r.point.scheme == scheme and not r.point.chaining
+                 and r.point.passes is None and kernel in _measures(r)]
+        if not cands:
+            continue
+        best = min(cands, key=lambda r: (r.metrics(kernel)[0],
+                                         r.point.name))
+        k = _measures(best)[kernel]
+        out[scheme] = {"point": best.point.name,
+                       "cycles": int(k["cycles"]),
+                       "harts": [dict(h) for h in k["hart_utilization"]]}
+    return out
+
+
+def pallas_summary(records: List[PointRecord], kernel: str,
+                   ) -> List[Dict[str, object]]:
+    """The walltime axis, one row per measured (precision, passes)
+    class: real Pallas walltime + compiled ``pallas_call`` count next to
+    the best simulated cycle count of the class's points — the
+    cycles-vs-walltime trade the co-design argument needs measured, not
+    modeled."""
+    rows: Dict[tuple, Dict[str, object]] = {}
+    for r in records:
+        k = _measures(r).get(kernel)
+        if not k or "pallas_calls" not in k:
+            continue
+        key = (r.point.precision_bits, r.point.passes)
+        row = rows.get(key)
+        if row is None:
+            row = rows[key] = {
+                "precision_bits": r.point.precision_bits,
+                "passes": list(r.point.passes)
+                if r.point.passes is not None else None,
+                "pallas_walltime_s": k["pallas_walltime_s"],
+                "pallas_calls": k["pallas_calls"],
+                "best_cycles": int(k["cycles"]),
+                "n_points": 0}
+        row["best_cycles"] = min(row["best_cycles"], int(k["cycles"]))
+        row["n_points"] += 1
+    return [rows[key] for key in sorted(
+        rows, key=lambda t: (t[0], t[1] is not None, t[1] or ()))]
+
+
 def subword_speedups(records: List[PointRecord], kernel: str,
                      ) -> Dict[str, object]:
     """cycles(32-bit) / cycles(8-bit) for every matched configuration
@@ -226,7 +278,12 @@ def build_report(result: SweepResult,
         per_kernel[kern] = {"front": front,
                             "speedup_vs_lanes":
                                 speedup_vs_lanes(recs, kern),
-                            "subword": sub, "checks": checks}
+                            "subword": sub, "checks": checks,
+                            "hart_utilization":
+                                hart_utilization_by_scheme(recs, kern)}
+        pallas = pallas_summary(recs, kern)
+        if pallas:
+            per_kernel[kern]["pallas"] = pallas
         # the checks dict mixes pass/fail booleans with integer
         # diagnostics (n_matched_groups) — gate on the booleans only,
         # the same contract __main__ uses when listing failures
@@ -249,6 +306,22 @@ def build_report(result: SweepResult,
             "subword_2x_on_mfu_bound": subword_ok,
         },
     }
+
+
+#: width of one utilization bar in characters
+_BAR_WIDTH = 30
+
+
+def _utilization_bar(busy: int, stall: int, total: int,
+                     width: int = _BAR_WIDTH) -> str:
+    """busy/stall/idle as one fixed-width bar: ``█`` busy, ``▒`` stall,
+    ``·`` idle. Cumulative rounding so the segments always sum to
+    ``width``."""
+    total = max(total, 1)
+    n_busy = round(width * busy / total)
+    n_stall = round(width * (busy + stall) / total) - n_busy
+    n_idle = width - n_busy - n_stall
+    return "█" * n_busy + "▒" * n_stall + "·" * n_idle
 
 
 def render_markdown(report: Dict[str, object]) -> str:
@@ -290,6 +363,41 @@ def render_markdown(report: Dict[str, object]) -> str:
             lines.append(f"### Sub-word: best 32-bit -> 8-bit speedup "
                          f"{sub['max_speedup']}x")
             lines.append("")
+        util = data.get("hart_utilization") or {}
+        if util:
+            lines += ["### Hart utilization (fastest default-pipeline "
+                      "point per scheme; █ busy, ▒ stall, · idle)", ""]
+            for scheme, u in util.items():
+                lines.append(f"- `{scheme}` — `{u['point']}` "
+                             f"({u['cycles']} cycles)")
+                for h, hb in enumerate(u["harts"]):
+                    bar = _utilization_bar(hb["busy"], hb["stall"],
+                                           hb["total"])
+                    lines.append(
+                        f"  - hart{h} `{bar}` "
+                        f"{100 * hb['busy'] // max(hb['total'], 1)}% busy, "
+                        f"{100 * hb['stall'] // max(hb['total'], 1)}% "
+                        f"stall, "
+                        f"{100 * hb['idle'] // max(hb['total'], 1)}% idle")
+            lines.append("")
+        pallas = data.get("pallas")
+        if pallas:
+            lines += ["### Pallas walltime (measured, homogeneous "
+                      "batch; one measurement per precision/pipeline "
+                      "class)", "",
+                      "| bits | pipeline | walltime (s) | pallas_calls "
+                      "| best sim cycles | points |",
+                      "|---|---|---|---|---|---|"]
+            for row in pallas:
+                pipe = "default" if row["passes"] is None else \
+                    ("raw" if row["passes"] == [] else
+                     "-".join(row["passes"]))
+                lines.append(
+                    f"| {row['precision_bits']} | {pipe} | "
+                    f"{row['pallas_walltime_s']} | "
+                    f"{row['pallas_calls']} | {row['best_cycles']} | "
+                    f"{row['n_points']} |")
+            lines.append("")
     return "\n".join(lines)
 
 
@@ -300,8 +408,13 @@ def smoke_space() -> DesignSpace:
 
 
 def full_space() -> DesignSpace:
-    """The paper-scale sweep: adds the chaining toggle axis."""
-    return DesignSpace(chaining=(False, True))
+    """The paper-scale sweep: adds the chaining toggle axis and the FU
+    replication axis (het-MIMD with a second MAC instance — the shared
+    multiplier is exactly what its three harts serialize on, so the
+    dual-MAC point lands on the matmul Pareto front between base het
+    and sym). Gated out of the smoke space so CI stays at 36 points."""
+    return DesignSpace(chaining=(False, True),
+                       fu_counts=((), (("multiplier", 2),)))
 
 
 def run_dse(smoke: bool = False, seed: int = 0,
@@ -309,14 +422,20 @@ def run_dse(smoke: bool = False, seed: int = 0,
             out_dir: Optional[str] = None,
             max_workers: int = 4,
             space: Optional[DesignSpace] = None,
+            executor: Optional[str] = None,
+            measure_pallas: bool = False,
             ) -> Tuple[SweepResult, Dict[str, object]]:
     """Sweep + report (+ artifacts). Writes ``dse_sweep.json``,
     ``dse_sweep.csv``, ``dse_report.md`` and ``BENCH_kvi_dse.json``
-    into ``out_dir`` when given."""
+    into ``out_dir`` when given. ``executor`` selects the sweep
+    executor (serial/thread/process); ``measure_pallas`` adds the
+    Pallas walltime stage to every point."""
     t0 = time.perf_counter()
     space = space or (smoke_space() if smoke else full_space())
     result = sweep(space, paper_kernel_factory(smoke=smoke, seed=seed),
-                   emit=emit, max_workers=max_workers)
+                   emit=emit, max_workers=max_workers,
+                   executor=executor,
+                   measure_pallas=True if measure_pallas else None)
     report = build_report(result)
     report["meta"]["smoke"] = smoke
     report["meta"]["seed"] = seed

@@ -73,6 +73,11 @@ class DesignPoint:
     # None -> the backend's default optimizing pipeline; () -> raw
     # programs; a tuple of registered pass names -> custom pipeline.
     passes: Optional[Tuple[str, ...]] = None
+    # Opt-in Pallas walltime measurement: the sweep additionally batches
+    # this point's programs through PallasBackend.run_workload and
+    # records real walltime + compiled pallas_call counts. A measurement
+    # mode, not a hardware axis — it does not enter the point's name.
+    measure_pallas: bool = False
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
@@ -175,7 +180,12 @@ class DesignSpace:
     def points(self) -> Tuple[DesignPoint, ...]:
         """Deterministic enumeration of all valid design points.
         Scheme-inconsistent combinations (e.g. het F >= M) are skipped;
-        the shared scheme collapses the M axis (always M=F=1)."""
+        the shared scheme collapses the M axis (always M=F=1), and the
+        ``fu_counts`` axis applies to het-MIMD only — the simulator
+        contends internal FU instances solely in the heterogeneous
+        scheme (shared/sym arbitrate whole MFUs), so replicated-unit
+        points for the other schemes would pay area for provably
+        identical cycles: always dominated, never informative."""
         out: List[DesignPoint] = []
         seen = set()
         for scheme in self.schemes:
@@ -186,13 +196,14 @@ class DesignSpace:
             else:
                 mf_pairs = [(m, f) for m in self.replication
                             for f in self.het_fus if f < m]
+            fus = self.fu_counts if scheme == "het_mimd" else ((),)
             for m, f in mf_pairs:
                 for d in self.lanes:
                     for prec in self.precisions:
                         for spm in self.spm_kbytes:
                             for ch in self.chaining:
                                 for pipe in self.pipelines:
-                                    for fu in self.fu_counts:
+                                    for fu in fus:
                                         pt = DesignPoint(
                                             scheme, m, f, d, prec, spm,
                                             ch, fu, pipe)
@@ -207,17 +218,25 @@ class DesignSpace:
 
 
 def preflight_point(point: DesignPoint, programs: Sequence,
-                    ) -> Optional[str]:
+                    trace_cache=None) -> Optional[str]:
     """SPM-capacity feasibility of ``point`` for a set of programs: runs
     the lowering allocator's liveness-based linear scan (the same code
     path the real execution takes) and returns the
     :class:`~repro.kvi.lowering.SpmOverflowError` message of the first
-    program that cannot be placed, or ``None`` when all fit."""
+    program that cannot be placed, or ``None`` when all fit.
+
+    With a :class:`~repro.kvi.lowering.TraceCache` the preflight lowers
+    each program timing-only *into the cache*, so the execution that
+    follows reuses the exact traces instead of re-allocating."""
     from repro.kvi.lowering import SpmOverflowError, allocate_vregs
     cfg = point.config()
     for p in programs:
         try:
-            allocate_vregs(p, cfg)
+            if trace_cache is not None:
+                trace_cache.lower(p, cfg, chaining=point.chaining,
+                                  functional=False)
+            else:
+                allocate_vregs(p, cfg)
         except SpmOverflowError as e:
             return str(e)
     return None

@@ -4,37 +4,71 @@ Each :class:`~repro.kvi.dse.space.DesignPoint` is executed through
 :class:`~repro.kvi.cyclesim.CycleSimBackend` exactly the way any other
 caller would run it — programs go through the optimizing pass pipeline
 (honoring the point's per-point ``passes`` / ``chaining`` toggles), are
-lowered once per configuration (liveness-based SPM allocation,
-:class:`SpmOverflowError` preflight), and the event-driven simulator
-produces cycles plus the per-hart busy/stall/idle breakdown. The cost
-model (:mod:`repro.kvi.dse.cost`) adds area and energy.
+lowered **once** per (program, configuration) through a per-point
+:class:`~repro.kvi.lowering.TraceCache` (liveness-based SPM allocation,
+:class:`SpmOverflowError` preflight, homogeneous and composite runs all
+share the cached trace), and the event-driven simulator produces cycles
+plus the per-hart busy/stall/idle breakdown. The cost model
+(:mod:`repro.kvi.dse.cost`) adds area and energy.
 
-Points fan out over a thread pool (``max_workers``); records always
-return in enumeration order, so sweeps are deterministic run-to-run.
+Points fan out through a pluggable executor
+(:mod:`repro.kvi.dse.executors`): ``serial``, ``thread`` (the legacy
+GIL-bound pool) or ``process`` (a spawn pool with real multi-core
+speedup). Records always return in enumeration order and carry
+deterministic per-point cache counters, so every executor produces the
+same :meth:`SweepResult.canonical_json` bytes.
 
 Measured per point:
   * per kernel, the paper's homogeneous protocol — the program
     replicated on all harts (``KviWorkload.replicate``),
   * the composite protocol — one kernel pinned per hart
-    (``KviWorkload.composite``), when the machine has enough harts.
+    (``KviWorkload.composite``), when the machine has enough harts,
+  * optionally (``measure_pallas``) real Pallas execution walltime and
+    compiled ``pallas_call`` counts — the co-design axis that trades
+    simulated cycles against measured interpret/TPU walltime. Pallas
+    execution is scheme/D/SPM-blind, so one measurement per distinct
+    ``(precision, passes, harts)`` class is shared across its points
+    (and run in the parent process, after the executor fan-out).
 """
 from __future__ import annotations
 
 import csv
+import dataclasses
 import json
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.kvi.dse.cost import HardwareCost, energy_model, hardware_cost
+from repro.kvi.dse.executors import (PointJob, SweepExecutor, make_executor)
 from repro.kvi.dse.space import (DesignPoint, DesignSpace, preflight_point)
 from repro.kvi.ir import KviProgram
+from repro.kvi.lowering import TraceCache
 
 #: scheme-dict key under which the swept config is registered
 POINT_KEY = "dse"
+
+#: JSON keys excluded from ``SweepResult.canonical_json()``: wall-clock
+#: measurements (nondeterministic run to run by nature) plus the
+#: executor label (the one meta field that names *how* the sweep ran
+#: rather than what it measured) — so executor-equivalence can be
+#: asserted byte-for-byte
+VOLATILE_KEYS = frozenset({"wall_s", "walltime_s", "pallas_walltime_s",
+                           "total_wall_s", "executor"})
+
+
+def scrub_volatile(obj):
+    """``obj`` with every :data:`VOLATILE_KEYS` entry removed,
+    recursively — the canonical (timing- and executor-free) view of a
+    sweep."""
+    if isinstance(obj, dict):
+        return {k: scrub_volatile(v) for k, v in obj.items()
+                if k not in VOLATILE_KEYS}
+    if isinstance(obj, (list, tuple)):
+        return [scrub_volatile(v) for v in obj]
+    return obj
 
 
 @dataclass
@@ -46,10 +80,16 @@ class PointRecord:
     reason: Optional[str] = None
     area: Optional[HardwareCost] = None
     # kernel name -> {"cycles", "energy_nj", "nj_per_cycle",
-    #                 "mfu_utilization", "hart_utilization": [...]}
+    #                 "mfu_utilization", "hart_utilization": [...],
+    #                 and with measure_pallas: "pallas_walltime_s",
+    #                 "pallas_calls"}
     kernels: Dict[str, Dict[str, object]] = field(default_factory=dict)
     composite: Optional[Dict[str, object]] = None
     wall_s: float = 0.0
+    # per-point TraceCache counters: "misses" == SPM-allocator runs
+    # (exactly one per kernel per compatible point), "hits" == lowers
+    # served from cache. Deterministic — part of the canonical JSON.
+    lowering: Optional[Dict[str, int]] = None
 
     @property
     def ok(self) -> bool:
@@ -78,6 +118,10 @@ class PointRecord:
             d["kernels"] = self.kernels
         if self.composite is not None:
             d["composite"] = self.composite
+        if self.lowering is not None:
+            d["lowering"] = dict(self.lowering)
+        if pt.measure_pallas:
+            d["measure_pallas"] = True
         return d
 
 
@@ -98,12 +142,28 @@ class SweepResult:
                 "kernels": list(self.kernel_names),
                 "points": [r.as_dict() for r in self.records]}
 
+    def canonical_json(self) -> str:
+        """The sweep serialized with every wall-clock field stripped —
+        byte-identical across executors (and across runs) for the same
+        space, kernels and flags. What the determinism tests compare."""
+        return json.dumps(scrub_volatile(self.to_json()), indent=2,
+                          sort_keys=True)
+
     def save_json(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.to_json(), f, indent=2, sort_keys=True)
 
+    @property
+    def measured_pallas(self) -> bool:
+        """True when any record carries Pallas walltime columns."""
+        return any("pallas_calls" in k for r in self.ok_records
+                   for k in r.kernels.values())
+
     def csv_rows(self) -> List[Dict[str, object]]:
-        """Flat (point x kernel) rows for spreadsheet analysis."""
+        """Flat (point x kernel) rows for spreadsheet analysis. With
+        Pallas measurement on, rows gain ``pallas_walltime_s`` /
+        ``pallas_calls`` columns (blank for unmeasured points)."""
+        with_pallas = self.measured_pallas
         rows = []
         for r in self.records:
             if not r.ok:
@@ -118,12 +178,17 @@ class SweepResult:
             if r.composite is not None:
                 measures["composite"] = r.composite
             for kname, k in measures.items():
-                rows.append(dict(
+                row = dict(
                     base, kernel=kname, cycles=k["cycles"],
                     energy_nj=round(float(k["energy_nj"]), 1),
                     mean_hart_utilization=round(float(np.mean(
                         [h["utilization"]
-                         for h in k["hart_utilization"]])), 4)))
+                         for h in k["hart_utilization"]])), 4))
+                if with_pallas:
+                    row["pallas_walltime_s"] = k.get("pallas_walltime_s",
+                                                     "")
+                    row["pallas_calls"] = k.get("pallas_calls", "")
+                rows.append(row)
         return rows
 
     def save_csv(self, path: str) -> None:
@@ -173,7 +238,12 @@ def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
     backend see the optimized programs — so a kernel that only fits the
     scratchpad after dce/copy_prop (the pipeline's register-reuse
     capability) is a valid design point, and the composite workload
-    does not re-optimize what the homogeneous runs already did."""
+    does not re-optimize what the homogeneous runs already did.
+
+    A per-point :class:`~repro.kvi.lowering.TraceCache` threads through
+    the preflight and both run protocols, so the SPM allocator runs
+    exactly once per kernel and timing-only lowers stop copying
+    ``mem_init`` buffers; the counters land in ``record.lowering``."""
     from repro.kvi.cyclesim import CycleSimBackend
     from repro.kvi.workload import KviWorkload
 
@@ -181,12 +251,15 @@ def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
     cfg = point.config()
     if not preoptimized:
         kernels = optimize_kernels(kernels, point.passes)
-    reason = preflight_point(point, list(kernels.values()))
+    cache = TraceCache()
+    reason = preflight_point(point, list(kernels.values()),
+                             trace_cache=cache)
     if reason is not None:
         return PointRecord(point, "incompatible", reason=reason,
-                           wall_s=time.perf_counter() - t0)
+                           wall_s=time.perf_counter() - t0,
+                           lowering=cache.stats)
     backend = CycleSimBackend(schemes={POINT_KEY: cfg}, passes=(),
-                              chaining=point.chaining)
+                              chaining=point.chaining, trace_cache=cache)
     rec = PointRecord(point, "ok", area=hardware_cost(cfg))
     for name, prog in kernels.items():
         wl = KviWorkload.replicate(prog, cfg.harts)
@@ -196,6 +269,7 @@ def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
             {h: [prog] for h, prog in enumerate(kernels.values())},
             name="composite")
         rec.composite = _measure(backend, wl, cfg)
+    rec.lowering = cache.stats
     rec.wall_s = time.perf_counter() - t0
     return rec
 
@@ -203,18 +277,97 @@ def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
 KernelFactory = Callable[[int], Dict[str, KviProgram]]
 
 
+def measure_pallas_points(records: Sequence[PointRecord],
+                          opt_cache: Dict[tuple, Dict[str, KviProgram]],
+                          composite: bool = True,
+                          emit: Optional[Callable[[str], None]] = None,
+                          ) -> Dict[str, object]:
+    """The opt-in Pallas walltime stage: batch each measured point's
+    programs through ``PallasBackend.run_workload`` (the paper's
+    homogeneous protocol as a :class:`KviWorkload`, plus the composite
+    workload) and attach ``pallas_walltime_s`` / ``pallas_calls`` to the
+    point's kernel measures.
+
+    Pallas execution does not model the swept hardware (no D, SPM or
+    scheme effect — the TPU grid is the parallelism), so points sharing
+    ``(precision_bits, passes, harts)`` are *one* measurement class:
+    the class is executed once and its numbers shared, which is what
+    makes ``--measure-pallas`` affordable over a 36-point smoke sweep
+    (3 classes, not 36 runs). Runs in the parent process, after the
+    executor fan-out, so worker processes never touch jax."""
+    from repro.kvi.pallas_backend import PallasBackend
+    from repro.kvi.workload import KviWorkload
+
+    classes: Dict[tuple, Dict[str, Dict[str, object]]] = {}
+    measured_points = 0
+    for rec in records:
+        if not (rec.ok and rec.point.measure_pallas):
+            continue
+        pt = rec.point
+        harts = pt.config().harts
+        key = (pt.precision_bits, pt.passes, harts)
+        if key not in classes:
+            kernels = opt_cache[(pt.precision_bits, pt.passes)]
+            backend = PallasBackend(passes=())   # plans already attached
+            per: Dict[str, Dict[str, object]] = {}
+            for name, prog in kernels.items():
+                wl = KviWorkload.replicate(prog, harts)
+                res = backend.run_workload(wl)
+                per[name] = {
+                    "pallas_walltime_s": round(res.meta["wall_s"], 4),
+                    "pallas_calls": res.pallas_calls}
+            if composite and harts >= len(kernels):
+                wl = KviWorkload.composite(
+                    {h: [p] for h, p in enumerate(kernels.values())},
+                    name="composite")
+                res = backend.run_workload(wl)
+                per["composite"] = {
+                    "pallas_walltime_s": round(res.meta["wall_s"], 4),
+                    "pallas_calls": res.pallas_calls}
+            classes[key] = per
+            if emit:
+                cells = " ".join(
+                    f"{k}={v['pallas_walltime_s']}s/"
+                    f"{v['pallas_calls']}calls"
+                    for k, v in per.items())
+                emit(f"pallas[b{key[0]} passes={key[1]} "
+                     f"harts={key[2]}] {cells}")
+        per = classes[key]
+        for name, measures in per.items():
+            target = rec.composite if name == "composite" \
+                else rec.kernels.get(name)
+            if target is not None:
+                target.update(measures)
+        measured_points += 1
+    return {"n_measured_points": measured_points,
+            "n_measurement_classes": len(classes)}
+
+
 def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
           kernel_factory: KernelFactory,
           composite: bool = True,
           max_workers: int = 4,
-          emit: Optional[Callable[[str], None]] = None) -> SweepResult:
+          emit: Optional[Callable[[str], None]] = None,
+          executor: Union[str, SweepExecutor, None] = None,
+          measure_pallas: Optional[bool] = None) -> SweepResult:
     """Run every point of ``space`` over the kernels the factory builds
     for that point's precision. Kernel programs are built once per
-    distinct precision and shared across points (read-only)."""
+    distinct precision, optimized once per distinct (precision, passes)
+    pair, and shared across points (read-only).
+
+    ``executor`` picks the fan-out strategy (``"serial"`` / ``"thread"``
+    / ``"process"`` or a :class:`SweepExecutor` instance); ``None``
+    keeps the legacy behavior — threads when ``max_workers > 1``.
+    ``measure_pallas=True`` forces the Pallas walltime stage on every
+    point (``None`` honors each point's own ``measure_pallas`` flag)."""
     points = space.points() if isinstance(space, DesignSpace) \
         else tuple(space)
     if not points:
         raise ValueError("sweep needs at least one design point")
+    if measure_pallas is not None:
+        points = tuple(
+            dataclasses.replace(pt, measure_pallas=measure_pallas)
+            for pt in points)
     kernels_by_prec: Dict[int, Dict[str, KviProgram]] = {}
     for pt in points:
         if pt.precision_bits not in kernels_by_prec:
@@ -230,17 +383,23 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
             opt_cache[key] = optimize_kernels(
                 kernels_by_prec[pt.precision_bits], pt.passes)
 
-    def job(pt: DesignPoint) -> PointRecord:
-        return run_point(pt, opt_cache[(pt.precision_bits, pt.passes)],
-                         composite, preoptimized=True)
+    ex = make_executor(executor, max_workers=max_workers)
+    jobs = [PointJob(pt, opt_cache[(pt.precision_bits, pt.passes)],
+                     composite) for pt in points]
 
     t0 = time.perf_counter()
-    if max_workers and max_workers > 1:
-        with ThreadPoolExecutor(max_workers=max_workers) as ex:
-            records = list(ex.map(job, points))
-    else:
-        records = [job(pt) for pt in points]
+    records = ex.map_jobs(jobs)
     wall = time.perf_counter() - t0
+    if len(records) != len(points):
+        raise RuntimeError(f"executor {ex.name!r} returned "
+                           f"{len(records)} records for {len(points)} "
+                           f"points — order-preserving map broken")
+
+    pallas_meta = None
+    if any(pt.measure_pallas for pt in points):
+        pallas_meta = measure_pallas_points(records, opt_cache,
+                                            composite=composite,
+                                            emit=emit)
 
     if emit:
         for r in records:
@@ -252,12 +411,18 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
             else:
                 emit(f"{r.point.name:42s} SKIP ({r.reason})")
     n_ok = sum(r.ok for r in records)
-    return SweepResult(
-        list(records), kernel_names,
-        meta={"n_points": len(points), "n_ok": n_ok,
-              "n_incompatible": len(points) - n_ok,
-              "schemes": sorted({p.scheme for p in points}),
-              "wall_s": round(wall, 3)})
+    lowering = {
+        "hits": sum(r.lowering["hits"] for r in records if r.lowering),
+        "misses": sum(r.lowering["misses"] for r in records
+                      if r.lowering)}
+    meta = {"n_points": len(points), "n_ok": n_ok,
+            "n_incompatible": len(points) - n_ok,
+            "schemes": sorted({p.scheme for p in points}),
+            "executor": ex.name, "lowering": lowering,
+            "wall_s": round(wall, 3)}
+    if pallas_meta is not None:
+        meta["pallas"] = pallas_meta
+    return SweepResult(list(records), kernel_names, meta=meta)
 
 
 # ---------------------------------------------------------------------------

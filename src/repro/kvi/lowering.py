@@ -19,11 +19,20 @@ With ``chaining=True`` the lowered element-wise instructions inside a
 planned :class:`~repro.kvi.passes.fusion.FusedRegion` (after the first)
 carry a ``chain_discount`` — the FU-chaining setup savings the cycle
 simulator subtracts (the paper's back-to-back SPM-resident op streams).
+
+Timing-only callers pass ``functional=False``: the lowered trace then
+*aliases* the program's ``mem_init`` buffers instead of copying them
+(simulation never touches memory contents) and refuses to ``execute()``.
+:class:`TraceCache` builds on that to share one lowered trace per
+``(program, config fingerprint, chaining)`` across run protocols — the
+design-space sweep's preflight, homogeneous and composite runs all hit
+the same allocation instead of re-running the SPM linear scan.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Tuple, Union
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -118,7 +127,12 @@ def _chained_items(program: KviProgram) -> frozenset:
 
 @dataclass
 class LoweredTrace:
-    """One KviProgram bound to one machine configuration."""
+    """One KviProgram bound to one machine configuration.
+
+    ``functional=False`` marks a timing-only trace: its ``mem`` dict
+    aliases the program's ``mem_init`` buffers (no copies were made), so
+    executing it would corrupt the immutable program — ``execute()``
+    refuses."""
 
     program: KviProgram
     config: KlessydraConfig
@@ -127,10 +141,16 @@ class LoweredTrace:
     mem: Dict[int, np.ndarray]       # legacy handle -> buffer
     vreg_addr: Dict[int, int]        # vreg id -> SPM byte address
     out_handles: Dict[str, int]      # output name -> legacy mem handle
+    functional: bool = True
 
     def execute(self) -> Dict[str, np.ndarray]:
         """Run the trace functionally on the SPM/main-memory model and
         collect the program's output buffers (bit-exact Mfu semantics)."""
+        if not self.functional:
+            raise RuntimeError(
+                f"trace of {self.program.name!r} was lowered with "
+                f"functional=False (mem buffers alias the program's "
+                f"mem_init); re-lower functionally to execute")
         from repro.core.programs import _run_items
         _run_items(self.items, self.spm, self.mem)
         return self.collect_outputs()
@@ -144,13 +164,24 @@ class LoweredTrace:
 
 
 def lower(program: KviProgram, config: KlessydraConfig,
-          chaining: bool = False) -> LoweredTrace:
+          chaining: bool = False, functional: bool = True,
+          vreg_addr: Optional[Dict[int, int]] = None) -> LoweredTrace:
     """Bind a program's vregs/buffers to one machine config and emit the
-    dynamic Instr/Scalar trace the simulator and Mfu consume."""
+    dynamic Instr/Scalar trace the simulator and Mfu consume.
+
+    ``functional=False`` skips the ``mem_init`` buffer copies (the trace
+    aliases the program's buffers and cannot be executed — timing-only).
+    ``vreg_addr`` injects a precomputed SPM allocation so repeated lowers
+    of one (program, config) pair skip the linear-scan allocator — the
+    :class:`TraceCache` fast path."""
     spm = SpmSpace(config)
-    vreg_addr = allocate_vregs(program, config)
+    if vreg_addr is None:
+        vreg_addr = allocate_vregs(program, config)
     # legacy memory handles are the MemRef ids (declaration order)
-    mem = {m.id: program.mem_init[m.id].copy() for m in program.mems}
+    if functional:
+        mem = {m.id: program.mem_init[m.id].copy() for m in program.mems}
+    else:
+        mem = {m.id: program.mem_init[m.id] for m in program.mems}
     out_handles = {m.name: m.id for m in program.outputs}
     chained = _chained_items(program) if chaining else frozenset()
 
@@ -196,4 +227,77 @@ def lower(program: KviProgram, config: KlessydraConfig,
                 i.chain_discount = config.vector_setup_cycles
             items.append(i)
     return LoweredTrace(program, config, items, spm, mem, vreg_addr,
-                        out_handles)
+                        out_handles, functional=functional)
+
+
+# ---------------------------------------------------------------------------
+# Trace caching across run protocols
+# ---------------------------------------------------------------------------
+
+
+def config_fingerprint(config: KlessydraConfig) -> tuple:
+    """A stable hashable identity for one machine configuration —
+    every field, so any parameter that could change lowering or timing
+    distinguishes cache entries."""
+    return dataclasses.astuple(config)
+
+
+@dataclass
+class TraceCache:
+    """Caches :func:`lower` results keyed on
+    ``(program identity, config fingerprint, chaining)``.
+
+    One sweep point runs each kernel through up to three protocols —
+    SPM preflight, the homogeneous run, the composite run — and without
+    caching each of them re-runs the linear-scan SPM allocator and
+    re-copies ``mem_init``. Through the cache the allocator runs exactly
+    once per (program, config): timing-only traces (``functional=False``)
+    are shared outright (simulation never mutates them), and functional
+    lowers reuse the cached SPM allocation while still getting fresh
+    buffer copies (execution mutates memory).
+
+    ``hits`` / ``misses`` count cache lookups; ``misses`` equals the
+    number of allocator runs, which is what the sweep's per-point
+    accounting asserts on.
+
+    Keys use program *identity* (programs are pinned alive so ids can't
+    recycle), so the cache only pays off when callers hand the backend
+    stable program objects — i.e. ``passes=()`` with pre-optimized
+    programs, the DSE configuration. A backend whose pass pipeline is
+    active rewrites programs into fresh objects per run, making every
+    lookup a miss; scope a TraceCache to one program set (the sweep
+    builds one per point), don't share it across unrelated runs.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    # key -> timing-only trace; each trace's .program field keeps the
+    # keyed program alive, so id() keys can never be recycled onto a
+    # different program object
+    _traces: Dict[tuple, LoweredTrace] = field(default_factory=dict)
+
+    def _key(self, program: KviProgram, config: KlessydraConfig,
+             chaining: bool) -> tuple:
+        return (id(program), config_fingerprint(config), bool(chaining))
+
+    def lower(self, program: KviProgram, config: KlessydraConfig,
+              chaining: bool = False,
+              functional: bool = True) -> LoweredTrace:
+        """Drop-in for :func:`lower` with caching."""
+        key = self._key(program, config, chaining)
+        trace = self._traces.get(key)
+        if trace is None:
+            self.misses += 1
+            trace = lower(program, config, chaining=chaining,
+                          functional=False)
+            self._traces[key] = trace
+        else:
+            self.hits += 1
+        if not functional:
+            return trace
+        return lower(program, config, chaining=chaining, functional=True,
+                     vreg_addr=trace.vreg_addr)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}

@@ -29,6 +29,7 @@ shim).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -330,7 +331,14 @@ class PallasBackend(BackendBase):
         """Group entries by program structure; each group runs as one
         batched walk (one compile + one dispatch per fused segment for the
         whole group). Hart assignments carry no timing meaning here — on
-        TPU the batch grid IS the hart-level parallelism."""
+        TPU the batch grid IS the hart-level parallelism.
+
+        ``meta`` reports the run's observability triple: structural
+        ``groups``, issued ``pallas_calls`` and ``wall_s`` — the real
+        execution walltime (outputs are materialized to numpy inside the
+        walk, so the clock covers compile + dispatch + compute, not an
+        async handle). The DSE walltime axis reads these directly."""
+        t0 = time.perf_counter()
         workload = self.optimize_workload(workload)
         calls_before = self.fused_calls + self.reduce_calls
         groups: Dict[tuple, List[int]] = {}
@@ -349,4 +357,6 @@ class PallasBackend(BackendBase):
         calls = self.fused_calls + self.reduce_calls - calls_before
         return WorkloadResult(self.name, workload, results,
                               meta={"groups": len(groups),
-                                    "pallas_calls": calls})
+                                    "pallas_calls": calls,
+                                    "wall_s": round(
+                                        time.perf_counter() - t0, 6)})

@@ -253,6 +253,14 @@ class WorkloadResult:
     def outputs(self) -> Tuple[Dict[str, object], ...]:
         return tuple(r.outputs for r in self.entry_results)
 
+    @property
+    def pallas_calls(self) -> Optional[int]:
+        """Compiled-kernel launches this run issued (Pallas backend
+        only — ``None`` elsewhere). The DSE walltime axis records this
+        next to ``meta['wall_s']``."""
+        n = self.meta.get("pallas_calls")
+        return None if n is None else int(n)
+
     def entry_result(self, i: int = 0) -> BackendResult:
         """Entry ``i``'s result, with the workload-level timing attached
         (what the legacy single-program ``run()`` returns)."""

@@ -1,6 +1,7 @@
 """Design-space exploration subsystem tests: config validation, space
 enumeration, cost model ordering, Pareto extraction (hypothesis
-properties + hand fixture), sweep driver, and the report checks."""
+properties + hand fixture), sweep driver (executors, trace cache,
+walltime axis), calibration fit, and the report checks."""
 import json
 
 import numpy as np
@@ -8,10 +9,12 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import KlessydraConfig, klessydra_taxonomy
-from repro.kvi.dse import (DesignPoint, DesignSpace, build_report,
-                           dominates, front_metrics, hardware_cost,
-                           pareto_front, preflight_point, run_point,
-                           scheme_config, sweep)
+from repro.kvi.dse import (DesignPoint, DesignSpace, ProcessExecutor,
+                           SerialExecutor, ThreadExecutor, build_report,
+                           calibration_fit, dominates, front_metrics,
+                           hardware_cost, make_executor, pareto_front,
+                           preflight_point, run_point, scheme_config,
+                           sweep)
 from repro.kvi.programs import conv2d_program, fft_program, matmul_program
 
 # ---------------------------------------------------------------------------
@@ -476,6 +479,271 @@ class TestFuCounts:
         with pytest.raises(ValueError, match="at least one"):
             sweep([], tiny_kernels, max_workers=1)
 
+
+# ---------------------------------------------------------------------------
+# LoweredTrace cache (tentpole: one allocator run per kernel per point)
+# ---------------------------------------------------------------------------
+
+
+class TestTraceCache:
+    def test_counters_and_shared_allocation(self):
+        from repro.kvi.lowering import TraceCache, lower
+        cache = TraceCache()
+        prog = tiny_kernels(32)["conv"]
+        cfg = DesignPoint("shared", 1, 1, 4).config()
+        t1 = cache.lower(prog, cfg, functional=False)
+        assert cache.stats == {"hits": 0, "misses": 1}
+        t2 = cache.lower(prog, cfg, functional=False)
+        assert t2 is t1                    # timing traces shared outright
+        assert cache.stats == {"hits": 1, "misses": 1}
+        # functional lowers hit the cached allocation but return fresh
+        # executable traces (memory gets mutated by execution)
+        t3 = cache.lower(prog, cfg, functional=True)
+        assert t3 is not t1 and t3.functional
+        assert t3.vreg_addr == t1.vreg_addr
+        assert cache.stats == {"hits": 2, "misses": 1}
+        # a different config is a different trace
+        cfg8 = DesignPoint("shared", 1, 1, 8).config()
+        cache.lower(prog, cfg8, functional=False)
+        assert cache.stats == {"hits": 2, "misses": 2}
+        # uncached lower is unchanged semantics
+        assert lower(prog, cfg).vreg_addr == t1.vreg_addr
+
+    def test_timing_trace_aliases_mem_and_refuses_execute(self):
+        from repro.kvi.lowering import lower
+        prog = tiny_kernels(32)["conv"]
+        cfg = DesignPoint("shared", 1, 1, 4).config()
+        timing = lower(prog, cfg, functional=False)
+        for m in prog.mems:
+            assert timing.mem[m.id] is prog.mem_init[m.id]  # no copy
+        with pytest.raises(RuntimeError, match="functional=False"):
+            timing.execute()
+        functional = lower(prog, cfg, functional=True)
+        for m in prog.mems:
+            assert functional.mem[m.id] is not prog.mem_init[m.id]
+
+    def test_backend_results_bit_identical_cache_on_vs_off(self):
+        from repro.kvi.cyclesim import CycleSimBackend
+        from repro.kvi.lowering import TraceCache
+        from repro.kvi.workload import KviWorkload
+        prog = tiny_kernels(32)["conv"]
+        wl = KviWorkload.replicate(prog, 3)
+        plain = CycleSimBackend()
+        cached = CycleSimBackend(trace_cache=TraceCache())
+        a = plain.run_workload(wl)
+        b = cached.run_workload(wl)
+        assert a.cycles == b.cycles
+        for ra, rb in zip(a.entry_results, b.entry_results):
+            for name in ra.outputs:
+                np.testing.assert_array_equal(ra.outputs[name],
+                                              rb.outputs[name])
+        # timing-only runs hit the same numbers too
+        at = plain.run_workload(wl, functional=False)
+        bt = cached.run_workload(wl, functional=False)
+        assert at.cycles == bt.cycles
+        # and the program's buffers were never corrupted by any of it
+        fresh = tiny_kernels(32)["conv"]
+        for m in prog.mems:
+            np.testing.assert_array_equal(prog.mem_init[m.id],
+                                          fresh.mem_init[m.id])
+
+    def test_run_point_allocates_once_per_kernel(self):
+        # preflight + homogeneous + composite used to run the SPM
+        # allocator up to 3x per kernel; through the cache it runs once
+        rec = run_point(DesignPoint("sym_mimd", 3, 3, 4),
+                        tiny_kernels(32))
+        assert rec.composite is not None   # composite protocol ran
+        assert rec.lowering == {"misses": 3, "hits": 6}  # 3 kernels
+        rec_nc = run_point(DesignPoint("sym_mimd", 3, 3, 4),
+                           tiny_kernels(32), composite=False)
+        assert rec_nc.lowering == {"misses": 3, "hits": 3}
+
+    def test_sweep_meta_aggregates_cache_counters(self, tiny_sweep):
+        lw = tiny_sweep.meta["lowering"]
+        n_ok = tiny_sweep.meta["n_ok"]
+        assert lw["misses"] == 3 * n_ok    # one per kernel per point
+        assert lw["hits"] == 6 * n_ok
+
+
+# ---------------------------------------------------------------------------
+# Executors (tentpole: serial / thread / process, deterministic merge)
+# ---------------------------------------------------------------------------
+
+#: the 5-point executor-determinism fixture: every scheme, two lane
+#: widths, both precisions, one incompatible point (SPM too small for
+#: the fixture's 32x32 conv at 32-bit: 4624 B peak-live vs 4 KiB)
+FIVE_POINTS = (
+    DesignPoint("shared", 1, 1, 2, precision_bits=32),
+    DesignPoint("shared", 1, 1, 8, precision_bits=8),
+    DesignPoint("sym_mimd", 3, 3, 4, precision_bits=32),
+    DesignPoint("het_mimd", 3, 1, 4, precision_bits=8),
+    DesignPoint("shared", 1, 1, 4, spm_kbytes=1),   # overflows
+)
+
+
+def fixture_kernels(precision_bits):
+    """tiny_kernels plus a 32x32 conv big enough that the fixture's
+    1-KiB point genuinely overflows at 32-bit (34x34 padded image =
+    4624 B peak-live vs the 4-KiB capacity floor)."""
+    ks = tiny_kernels(precision_bits)
+    eb = precision_bits // 8
+    rng = np.random.default_rng(3)
+    img = rng.integers(-8, 8, (32, 32)).astype(np.int32)
+    filt = rng.integers(-4, 4, (3, 3)).astype(np.int32)
+    ks["bigconv"] = conv2d_program(img, filt, shift=2, elem_bytes=eb)
+    return ks
+
+
+class TestExecutors:
+    def test_make_executor_resolution(self):
+        assert isinstance(make_executor(None, max_workers=1),
+                          SerialExecutor)
+        assert isinstance(make_executor(None, max_workers=4),
+                          ThreadExecutor)
+        assert isinstance(make_executor("process", max_workers=2),
+                          ProcessExecutor)
+        ex = SerialExecutor()
+        assert make_executor(ex) is ex
+        with pytest.raises(ValueError, match="unknown sweep executor"):
+            make_executor("gpu")
+
+    def test_sweep_records_executor_in_meta(self, tiny_sweep):
+        assert tiny_sweep.meta["executor"] == "serial"
+        res = sweep(FIVE_POINTS[:1], tiny_kernels, max_workers=4)
+        assert res.meta["executor"] == "thread"
+
+    def test_thread_executor_matches_serial(self):
+        serial = sweep(FIVE_POINTS, fixture_kernels, executor="serial")
+        threaded = sweep(FIVE_POINTS, fixture_kernels,
+                         executor="thread", max_workers=4)
+        assert serial.canonical_json() == threaded.canonical_json()
+
+    def test_process_executor_matches_serial(self):
+        # the acceptance gate: ProcessExecutor pickles jobs to spawn
+        # workers and merges records deterministically — canonical
+        # JSON (wall-clock fields stripped) must be byte-identical,
+        # trace-cache counters and the incompatible record included
+        serial = sweep(FIVE_POINTS, fixture_kernels, executor="serial")
+        procs = sweep(FIVE_POINTS, fixture_kernels, executor="process",
+                      max_workers=2)
+        assert serial.canonical_json() == procs.canonical_json()
+        assert procs.meta["executor"] == "process"
+        assert procs.records[4].status == "incompatible"
+        assert procs.records[0].lowering == \
+            serial.records[0].lowering
+
+    def test_canonical_json_strips_volatile_fields(self, tiny_sweep):
+        from repro.kvi.dse.sweep import scrub_volatile
+        js = tiny_sweep.canonical_json()
+        assert "wall_s" not in js and '"executor"' not in js
+        assert "cycles" in js              # measurements survive
+        assert scrub_volatile({"wall_s": 1, "x": [{"walltime_s": 2}],
+                               "cycles": 3}) == {"x": [{}], "cycles": 3}
+
+
+# ---------------------------------------------------------------------------
+# Pallas walltime axis (tentpole: measure, don't model)
+# ---------------------------------------------------------------------------
+
+
+def saxpy_kernels(precision_bits):
+    """One small element-wise kernel so the interpret-mode Pallas stage
+    stays sub-second in the default suite."""
+    from repro.kvi.ir import KviProgramBuilder
+    eb = precision_bits // 8
+    x = np.arange(-32, 32, dtype=np.int32)
+    b = KviProgramBuilder("saxpy")
+    v = b.vreg("v", 64, elem_bytes=eb)
+    b.kmemld(v, b.mem_in("x", x.astype(np.int32)))
+    b.ksvmulsc(v, v, scalar=3)
+    b.krelu(v, v)
+    b.kmemstr(b.mem_out("y", 64), v)
+    return {"saxpy": b.build()}
+
+
+class TestPallasWalltime:
+    def test_measure_pallas_attaches_walltime_columns(self):
+        pts = [DesignPoint("shared", 1, 1, 4, measure_pallas=True),
+               DesignPoint("sym_mimd", 3, 3, 4, measure_pallas=True),
+               DesignPoint("shared", 1, 1, 8)]     # not measured
+        res = sweep(pts, saxpy_kernels, max_workers=1, composite=False)
+        for rec in res.records[:2]:
+            k = rec.kernels["saxpy"]
+            assert k["pallas_calls"] > 0
+            assert k["pallas_walltime_s"] >= 0
+        assert "pallas_calls" not in res.records[2].kernels["saxpy"]
+        # scheme/D don't change pallas execution: both measured points
+        # are one measurement class sharing one set of numbers
+        assert res.meta["pallas"] == {"n_measured_points": 2,
+                                      "n_measurement_classes": 1}
+        a, b = (r.kernels["saxpy"] for r in res.records[:2])
+        assert a["pallas_calls"] == b["pallas_calls"]
+        assert a["pallas_walltime_s"] == b["pallas_walltime_s"]
+        # CSV grows the walltime columns, blank for unmeasured points
+        rows = res.csv_rows()
+        assert rows[0]["pallas_calls"] > 0
+        assert rows[2]["pallas_calls"] == ""
+
+    def test_sweep_level_override_and_report(self):
+        res = sweep([DesignPoint("shared", 1, 1, 4)], saxpy_kernels,
+                    max_workers=1, composite=False, measure_pallas=True)
+        assert res.measured_pallas
+        report = build_report(res)
+        pal = report["kernels"]["saxpy"]["pallas"]
+        assert len(pal) == 1
+        assert pal[0]["precision_bits"] == 32
+        assert pal[0]["pallas_calls"] > 0
+        from repro.kvi.dse import render_markdown
+        md = render_markdown(report)
+        assert "Pallas walltime" in md and "pallas_calls" in md
+
+    def test_unmeasured_sweep_has_no_pallas_columns(self, tiny_sweep):
+        assert not tiny_sweep.measured_pallas
+        assert "pallas" not in tiny_sweep.meta
+        assert "pallas_calls" not in tiny_sweep.csv_rows()[0]
+
+
+# ---------------------------------------------------------------------------
+# Calibration fit (satellite: CALIBRATION vs paper Table 3 energies)
+# ---------------------------------------------------------------------------
+
+
+class TestCalibrationFit:
+    def test_current_constants_fit_table3(self):
+        fit = calibration_fit()
+        assert fit["ok"], fit
+        assert fit["max_rel_err"] <= fit["threshold"]
+        # every T13 (scheme, D) x filter-order row participates
+        assert len(fit["rows"]) == 5 * 4
+        assert {r["scheme"] for r in fit["rows"]} == \
+            {"T13 SIMD", "T13 Sym MIMD", "T13 Het MIMD"}
+        json.dumps(fit)                    # BENCH-serializable
+
+    def test_drifted_constants_fail_the_gate(self):
+        # 5x the static-power constant pushes every predicted nJ/cycle
+        # out of the paper's regime — the gate must catch it
+        from repro.kvi.dse.cost import CALIBRATION
+        key = "static_nj_per_cycle_per_kluteq"
+        orig = CALIBRATION[key]
+        try:
+            CALIBRATION[key] = orig * 5
+            assert not calibration_fit()["ok"]
+        finally:
+            CALIBRATION[key] = orig
+
+    def test_report_renders_utilization_bars(self, tiny_sweep):
+        from repro.kvi.dse import render_markdown
+        report = build_report(tiny_sweep)
+        util = report["kernels"]["conv"]["hart_utilization"]
+        assert set(util) == {"shared", "sym_mimd", "het_mimd"}
+        for u in util.values():
+            assert len(u["harts"]) == 3
+            for h in u["harts"]:
+                assert h["busy"] + h["stall"] + h["idle"] == h["total"]
+        md = render_markdown(report)
+        assert "Hart utilization" in md
+        assert "█" in md and "▒" in md
+
     def test_speedup_curves_keep_spm_series_apart(self):
         from repro.kvi.dse.report import speedup_vs_lanes
         pts = [DesignPoint("shared", 1, 1, d, precision_bits=32,
@@ -485,3 +753,37 @@ class TestFuCounts:
         curves = speedup_vs_lanes(res.ok_records, "conv")
         assert len(curves) == 2           # one series per spm size
         assert all(set(c) == {"D2", "D8"} for c in curves.values())
+
+    def test_second_mac_lands_on_matmul_front(self):
+        # ROADMAP item: het-MIMD's three harts serialize on the shared
+        # multiplier during matmul — a second MAC instance buys cycles
+        # for area nobody else offers at that price, so the dual-MAC
+        # point must be non-dominated (on the Pareto front)
+        dual = DesignPoint("het_mimd", 3, 1, 4,
+                           fu_counts=(("multiplier", 2),))
+        pts = [DesignPoint("shared", 1, 1, 4),
+               DesignPoint("sym_mimd", 3, 3, 4),
+               DesignPoint("het_mimd", 3, 1, 4), dual]
+        res = sweep(pts, tiny_kernels, max_workers=1, composite=False)
+        front = pareto_front(res.ok_records,
+                             key=lambda r: r.metrics("matmul"))
+        assert dual.name in {r.point.name for r in front}
+        by_name = {r.point.name: r for r in res.records}
+        base = by_name[pts[2].name]
+        assert by_name[dual.name].kernels["matmul"]["cycles"] < \
+            base.kernels["matmul"]["cycles"]
+        assert by_name[dual.name].area.area_luteq > base.area.area_luteq
+
+    def test_full_space_carries_fu_axis_smoke_does_not(self):
+        from repro.kvi.dse import full_space, smoke_space
+        assert smoke_space().size == 36            # CI budget unchanged
+        assert all(pt.fu_counts == () for pt in smoke_space().points())
+        full = full_space().points()
+        assert any(pt.fu_counts == (("multiplier", 2),) for pt in full)
+        # the axis is het-only: the simulator contends internal FU
+        # instances solely in the heterogeneous scheme, so shared/sym
+        # replicated-unit points would be inert (identical cycles,
+        # strictly more area — always dominated)
+        assert all(pt.scheme == "het_mimd" for pt in full
+                   if pt.fu_counts)
+        assert len(full) == 36 * 2 + 12 * 2        # base x chain + het fu
