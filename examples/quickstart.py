@@ -58,7 +58,7 @@ def conv_differential():
 
 def scheme_sweep():
     print("\n=== 3. Coprocessor scheme sweep (conv 32x32, 3x3) ===")
-    for name, cfg in klessydra_taxonomy().items():
+    for _name, cfg in klessydra_taxonomy().items():
         r = homogeneous_cycles(cfg, "conv32")
         print(f"  {cfg.name:16s} avg cycles/kernel = {r['avg_cycles']:8.0f} "
               f"(MFU util {r['mfu_util']:.2f})")

@@ -23,6 +23,7 @@ Pallas backend needs jax; the registry degrades gracefully without it).
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 from typing import (TYPE_CHECKING, Callable, Dict, Optional, Protocol,
                     runtime_checkable)
@@ -93,20 +94,48 @@ class BackendBase:
     and pre-optimized programs: an active pipeline rewrites programs
     into fresh objects on every ``run_workload()``, which would turn
     every lookup into a miss (and pin each rewritten program alive).
+
+    ``verify`` gates the static analyzer (:mod:`repro.kvi.analysis`) in
+    front of execution: the workload is verified (structural checks,
+    fusion audit, cross-hart race check) and rejected with a
+    :class:`~repro.kvi.analysis.KviVerificationError` on any
+    error-severity diagnostic, and the pass pipeline re-verifies after
+    every pass (:class:`~repro.kvi.passes.PassVerificationError` names
+    the offending pass). Every built-in backend ctor takes ``verify=``,
+    and ``run_workload(verify=...)`` overrides it per call.
     """
 
     passes = None                    # None => default pipeline; () => off
+    verify = False                   # True => static-verify before running
 
     def run(self, program: KviProgram) -> BackendResult:
         from repro.kvi.workload import KviWorkload
         return self.run_workload(KviWorkload.single(program)).entry_result(0)
 
-    def optimize_workload(self, workload: "KviWorkload") -> "KviWorkload":
+    def optimize_workload(self, workload: "KviWorkload",
+                          verify: Optional[bool] = None) -> "KviWorkload":
         """The optimized workload this backend actually executes. Each
         distinct program object is optimized once; pipelines that change
-        nothing hand back the identical workload object."""
+        nothing hand back the identical workload object.
+
+        ``verify=None`` defers to ``self.verify``; ``True`` statically
+        verifies the workload first (raising
+        :class:`~repro.kvi.analysis.KviVerificationError` on errors) and
+        runs the pipeline in its self-checking mode."""
+        check = self.verify if verify is None else verify
+        if check:
+            from repro.kvi.analysis import (DiagnosticReport,
+                                            KviVerificationError,
+                                            analyze_workload)
+            rep = analyze_workload(workload)
+            if not rep.ok:
+                raise KviVerificationError(
+                    DiagnosticReport(rep.errors),
+                    context=f"backend {self.name!r} rejected workload "
+                            f"{workload.name!r}")
         from repro.kvi.passes import PassPipeline
-        pipe = PassPipeline.from_spec(getattr(self, "passes", None))
+        pipe = PassPipeline.from_spec(getattr(self, "passes", None),
+                                      verify=check)
         if not pipe:
             return workload
         return workload.map_programs(pipe.run)
@@ -153,7 +182,5 @@ def _ensure_builtin_backends():
         return
     _BOOTED = True
     from repro.kvi import cyclesim, oracle  # noqa: F401  (side-effect import)
-    try:
+    with contextlib.suppress(ImportError):     # pragma: no cover - no jax
         from repro.kvi import pallas_backend  # noqa: F401
-    except ImportError:                        # pragma: no cover - no jax
-        pass

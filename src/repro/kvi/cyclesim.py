@@ -53,10 +53,12 @@ class CycleSimBackend(BackendBase):
                  schemes: Optional[Dict[str, KlessydraConfig]] = None,
                  replicate_harts: bool = True,
                  passes=None, chaining: bool = False,
-                 trace_cache: Optional[TraceCache] = None):
+                 trace_cache: Optional[TraceCache] = None,
+                 verify: bool = False):
         self.schemes = schemes or default_schemes()
         self.replicate_harts = replicate_harts
         self.passes = passes
+        self.verify = verify
         # FU chaining: ops inside a planned FusedRegion (after the head)
         # skip their startup latency — the paper's back-to-back SPM-
         # resident op streams. Off by default so the Table 2/3 numbers
@@ -84,11 +86,12 @@ class CycleSimBackend(BackendBase):
         return self.run_workload(wl).entry_result(0)
 
     def run_workload(self, workload: KviWorkload,
-                     functional: bool = True) -> WorkloadResult:
+                     functional: bool = True,
+                     verify: Optional[bool] = None) -> WorkloadResult:
         """Timing for the whole workload per scheme, plus (with
         ``functional=True``) per-entry outputs. Timing-only callers (the
         Table-2 sweeps) pass ``functional=False`` to skip the Mfu replay."""
-        workload = self.optimize_workload(workload)
+        workload = self.optimize_workload(workload, verify=verify)
         timing: Dict[str, SimResult] = {}
         entry_outputs = None if functional else \
             [{} for _ in workload.entries]
@@ -111,12 +114,12 @@ class CycleSimBackend(BackendBase):
                 # so Oracle == CycleSim bit-for-bit by construction
                 entry_outputs = dedup_entry_outputs(
                     workload.entries,
-                    lambda p: traces[id(p)].execute())
+                    lambda p, traces=traces: traces[id(p)].execute())
             per_hart = workload.assign_harts(cfg.harts)
             progs = [
                 [it for i in idxs
                  for it in traces[id(workload.entries[i].program)].items]
-                for hart, idxs in enumerate(per_hart)]
+                for idxs in per_hart]
             timing[scheme] = simulate(cfg, progs)
         results = tuple(BackendResult(self.name, out)
                         for out in entry_outputs)

@@ -234,7 +234,7 @@ def subword_speedups(records: List[PointRecord], kernel: str,
         by_cfg.setdefault(_precision_key(r), {})[
             r.point.precision_bits] = r
     pairs = []
-    for cfg_key, by_prec in sorted(by_cfg.items()):
+    for _cfg_key, by_prec in sorted(by_cfg.items()):
         if 8 in by_prec and 32 in by_prec:
             c32 = by_prec[32].metrics(kernel)[0]
             c8 = by_prec[8].metrics(kernel)[0]

@@ -219,24 +219,42 @@ class DesignSpace:
 
 def preflight_point(point: DesignPoint, programs: Sequence,
                     trace_cache=None) -> Optional[str]:
-    """SPM-capacity feasibility of ``point`` for a set of programs: runs
-    the lowering allocator's liveness-based linear scan (the same code
-    path the real execution takes) and returns the
-    :class:`~repro.kvi.lowering.SpmOverflowError` message of the first
-    program that cannot be placed, or ``None`` when all fit.
+    """SPM-capacity feasibility of ``point`` for a set of programs,
+    checked in two stages:
 
-    With a :class:`~repro.kvi.lowering.TraceCache` the preflight lowers
-    each program timing-only *into the cache*, so the execution that
-    follows reuses the exact traces instead of re-allocating."""
+    1. the **static** SPM-pressure estimate
+       (:func:`repro.kvi.analysis.spm_pressure` — the analyzer's KVI301
+       check) rejects over-pressure programs without touching the
+       allocator or the trace cache,
+    2. programs that pass run through the lowering allocator's
+       liveness-based linear scan (the same code path the real
+       execution takes), surfacing any residual
+       :class:`~repro.kvi.lowering.SpmOverflowError` message.
+
+    The static estimate reuses the allocator's own liveness peak with
+    the allocator's exact line rounding, so the two stages agree; the
+    second stage exists to warm the :class:`~repro.kvi.lowering.
+    TraceCache` (each program lowers timing-only *into the cache*, so
+    the execution that follows reuses the exact traces) and as a
+    belt-and-braces check that they stay in agreement.
+
+    Returns the rejection reason of the first program that cannot be
+    placed, or ``None`` when all fit."""
+    from repro.kvi.analysis import spm_pressure
     from repro.kvi.lowering import SpmOverflowError, allocate_vregs
     cfg = point.config()
     for p in programs:
+        pressure = spm_pressure(p, cfg)
+        if not pressure.fits:
+            return (f"static SPM overflow (KVI301): program "
+                    f"{p.name!r} peak-live {pressure.peak_live_bytes} B "
+                    f"exceeds SPM capacity {pressure.capacity_bytes} B")
         try:
             if trace_cache is not None:
                 trace_cache.lower(p, cfg, chaining=point.chaining,
                                   functional=False)
             else:
                 allocate_vregs(p, cfg)
-        except SpmOverflowError as e:
-            return str(e)
+        except SpmOverflowError as e:   # pragma: no cover - static
+            return str(e)               # estimate should reject first
     return None

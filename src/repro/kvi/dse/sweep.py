@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.kvi.analysis import spm_pressure
 from repro.kvi.dse.cost import HardwareCost, energy_model, hardware_cost
 from repro.kvi.dse.executors import (PointJob, SweepExecutor, make_executor)
 from repro.kvi.dse.space import (DesignPoint, DesignSpace, preflight_point)
@@ -81,6 +82,8 @@ class PointRecord:
     area: Optional[HardwareCost] = None
     # kernel name -> {"cycles", "energy_nj", "nj_per_cycle",
     #                 "mfu_utilization", "hart_utilization": [...],
+    #                 "static_spm": {"peak_live_bytes", ...} (the
+    #                 analyzer's KVI301 estimate for this point),
     #                 and with measure_pallas: "pallas_walltime_s",
     #                 "pallas_calls"}
     kernels: Dict[str, Dict[str, object]] = field(default_factory=dict)
@@ -264,6 +267,9 @@ def run_point(point: DesignPoint, kernels: Dict[str, KviProgram],
     for name, prog in kernels.items():
         wl = KviWorkload.replicate(prog, cfg.harts)
         rec.kernels[name] = _measure(backend, wl, cfg)
+        # the analyzer's static SPM estimate for this (kernel, point) —
+        # deterministic, so it rides into the canonical JSON
+        rec.kernels[name]["static_spm"] = spm_pressure(prog, cfg).as_dict()
     if composite and cfg.harts >= len(kernels):
         wl = KviWorkload.composite(
             {h: [prog] for h, prog in enumerate(kernels.values())},

@@ -78,6 +78,10 @@ class Ref:
     def __post_init__(self):
         if self.space not in ("vreg", "mem"):
             raise ValueError(f"bad operand space {self.space!r}")
+        if self.offset < 0:
+            raise ValueError(
+                f"negative offset {self.offset} in {self.space} operand "
+                f"#{self.id}")
 
 
 @dataclass(frozen=True)
@@ -123,16 +127,18 @@ class VReg:
     __slots__ = ("name", "id", "length", "elem_bytes")
 
     def __init__(self, name: str, id: int, length: int, elem_bytes: int = 4):
+        if length <= 0:
+            raise ValueError(
+                f"vreg {name!r}: length must be > 0, got {length}")
+        if elem_bytes not in (1, 2, 4):
+            raise ValueError(
+                f"vreg {name!r}: elem_bytes must be 1/2/4, got {elem_bytes}")
         self.name = name
         self.id = id
         self.length = length
         self.elem_bytes = elem_bytes
 
     def view(self, offset: int, length: int) -> "View":
-        if offset < 0 or offset + length > self.length:
-            raise IndexError(
-                f"view [{offset}:{offset + length}) outside vreg "
-                f"{self.name!r} of length {self.length}")
         return View(self, offset, length)
 
     def __getitem__(self, key) -> "View":
@@ -157,6 +163,17 @@ class View:
     __slots__ = ("reg", "offset", "length")
 
     def __init__(self, reg: VReg, offset: int, length: int):
+        if offset < 0:
+            raise ValueError(
+                f"view of vreg {reg.name!r}: negative offset {offset}")
+        if length <= 0:
+            raise ValueError(
+                f"view of vreg {reg.name!r}: length must be > 0, "
+                f"got {length}")
+        if offset + length > reg.length:
+            raise IndexError(
+                f"view [{offset}:{offset + length}) outside vreg "
+                f"{reg.name!r} of length {reg.length}")
         self.reg = reg
         self.offset = offset
         self.length = length
@@ -276,12 +293,19 @@ class KviProgramBuilder:
 
     # ---- declarations ---------------------------------------------------
     def vreg(self, name: str, length: int, elem_bytes: int = 4) -> VReg:
+        if any(r.name == name for r in self._vregs):
+            raise ValueError(
+                f"duplicate vreg name {name!r} in program {self.name!r}")
         r = VReg(name, len(self._vregs), length, elem_bytes)
         self._vregs.append(r)
         return r
 
     def _mem(self, name: str, arr: np.ndarray, elem_bytes: int,
              is_output: bool) -> MemRef:
+        if any(m.name == name for m in self._mems):
+            raise ValueError(
+                f"duplicate memory buffer name {name!r} in program "
+                f"{self.name!r}")
         arr = np.ascontiguousarray(arr)
         m = MemRef(name, len(self._mems), int(arr.size), elem_bytes,
                    is_output)
@@ -348,7 +372,7 @@ class KviProgramBuilder:
     def _vv(self, op: KviOp, dst: Vec, a: Vec, b: Vec,
             scalar: int = 0) -> KviInstr:
         d, va, vb = as_view(dst), as_view(a), as_view(b)
-        if not (len(va) == len(vb)):
+        if len(va) != len(vb):
             raise ValueError(f"{op.value}: source length mismatch "
                              f"{len(va)} vs {len(vb)}")
         return self._emit(op, d.ref, va.ref, vb.ref, scalar, len(va),

@@ -29,12 +29,14 @@ class OracleBackend(BackendBase):
     the differential fuzz tests compare every optimized run against."""
 
     def __init__(self, config: Optional[KlessydraConfig] = None,
-                 passes=None):
+                 passes=None, verify: bool = False):
         self.config = config or _ORACLE_CFG
         self.passes = passes
+        self.verify = verify
 
-    def run_workload(self, workload: KviWorkload) -> WorkloadResult:
-        workload = self.optimize_workload(workload)
+    def run_workload(self, workload: KviWorkload,
+                     verify: Optional[bool] = None) -> WorkloadResult:
+        workload = self.optimize_workload(workload, verify=verify)
         outs = dedup_entry_outputs(
             workload.entries,
             lambda p: lower(p, self.config).execute())

@@ -196,12 +196,13 @@ class PallasBackend(BackendBase):
     def __init__(self, interpret: Optional[bool] = None, block: int = 1024,
                  max_fused_ops: int = MAX_FUSED_OPS,
                  max_fused_inputs: int = MAX_FUSED_INPUTS,
-                 passes=None):
+                 passes=None, verify: bool = False):
         self.interpret = INTERPRET if interpret is None else interpret
         self.block = block
         self.max_fused_ops = max_fused_ops
         self.max_fused_inputs = max_fused_inputs
         self.passes = passes
+        self.verify = verify
         self.fused_calls = 0             # observability: pallas_call count
         self.reduce_calls = 0           # vmapped reduction kernel launches
 
@@ -327,7 +328,8 @@ class PallasBackend(BackendBase):
             results.append(outputs)
         return results
 
-    def run_workload(self, workload: KviWorkload) -> WorkloadResult:
+    def run_workload(self, workload: KviWorkload,
+                     verify: Optional[bool] = None) -> WorkloadResult:
         """Group entries by program structure; each group runs as one
         batched walk (one compile + one dispatch per fused segment for the
         whole group). Hart assignments carry no timing meaning here — on
@@ -339,7 +341,7 @@ class PallasBackend(BackendBase):
         walk, so the clock covers compile + dispatch + compute, not an
         async handle). The DSE walltime axis reads these directly."""
         t0 = time.perf_counter()
-        workload = self.optimize_workload(workload)
+        workload = self.optimize_workload(workload, verify=verify)
         calls_before = self.fused_calls + self.reduce_calls
         groups: Dict[tuple, List[int]] = {}
         for idx, e in enumerate(workload.entries):

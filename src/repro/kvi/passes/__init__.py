@@ -27,13 +27,14 @@ from repro.kvi.passes.fusion import (FusedRegion, FusionPlan, MAX_FUSED_INPUTS,
 from repro.kvi.passes.liveness import (observable_items, peak_live_bytes,
                                        reg_intervals, total_vreg_bytes)
 from repro.kvi.passes.pipeline import (DEFAULT_PASSES, REGISTERED_PASSES,
-                                       PassPipeline, default_pipeline,
-                                       optimize_program)
+                                       PassPipeline, PassVerificationError,
+                                       default_pipeline, optimize_program)
 
 __all__ = [
     "copy_prop", "dce", "fuse_regions", "plan_fusion_regions",
     "FusedRegion", "FusionPlan", "MAX_FUSED_OPS", "MAX_FUSED_INPUTS",
     "META_KEY", "observable_items", "peak_live_bytes", "reg_intervals",
-    "total_vreg_bytes", "PassPipeline", "DEFAULT_PASSES",
-    "REGISTERED_PASSES", "default_pipeline", "optimize_program",
+    "total_vreg_bytes", "PassPipeline", "PassVerificationError",
+    "DEFAULT_PASSES", "REGISTERED_PASSES", "default_pipeline",
+    "optimize_program",
 ]

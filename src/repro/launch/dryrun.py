@@ -11,6 +11,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
 """
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -115,10 +116,8 @@ def main() -> int:
     overrides = {}
     for ov in args.override:
         k, v = ov.split("=", 1)
-        try:
+        with contextlib.suppress(json.JSONDecodeError):
             v = json.loads(v)
-        except json.JSONDecodeError:
-            pass
         overrides[k] = v
 
     from repro.configs import all_cells, arch_cells

@@ -96,6 +96,6 @@ def unpipelined_reference(stage_fn: Callable, stage_params, x):
     """Sequentially apply all stages (oracle for tests)."""
     S = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
     for s in range(S):
-        p = jax.tree_util.tree_map(lambda a: a[s], stage_params)
+        p = jax.tree_util.tree_map(lambda a, s=s: a[s], stage_params)
         x = stage_fn(p, x)
     return x

@@ -1,0 +1,597 @@
+"""Static-analysis layer tests: verifier, hazard analyzer, pipeline
+verify mode, backend gate, DSE preflight agreement, CLI.
+
+Defects that construction-time validation now rejects (OOB views,
+negative offsets) are seeded post-hoc with ``dataclasses.replace`` on
+the frozen IR — exactly how a buggy pass would corrupt a program."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import KlessydraConfig
+from repro.kvi import KviInstr, KviOp, KviProgramBuilder
+from repro.kvi.analysis import (CODES, Diagnostic, DiagnosticReport,
+                                KviVerificationError, Severity,
+                                analyze_program, analyze_workload,
+                                check_spm_pressure, check_workload,
+                                dependence_graph, spm_pressure,
+                                verify_program, windows_overlap)
+from repro.kvi.analysis.registry import (REGISTERED_TARGETS, build_target,
+                                         registered_targets)
+from repro.kvi.backend import get_backend
+from repro.kvi.ir import KviProgram, Ref, VReg, View
+from repro.kvi.passes import (META_KEY, FusionPlan, PassPipeline,
+                              PassVerificationError, optimize_program)
+from repro.kvi.workload import KviWorkload
+
+CFG = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=32)
+
+
+def small_program(name="demo"):
+    b = KviProgramBuilder(name)
+    h = b.mem_in("x", np.arange(16, dtype=np.int32))
+    v = b.vreg("v", 16)
+    w = b.vreg("w", 16)
+    b.kmemld(v, h)
+    b.ksvmulsc(w, v, scalar=2)
+    b.kaddv(w, w, v)
+    out = b.mem_out("y", 16)
+    b.kmemstr(out, w)
+    return b.build()
+
+
+def replace_instr(program, idx, **fields):
+    """``program`` with item ``idx`` rebuilt via dataclasses.replace —
+    the defect-seeding path construction validation can't stop."""
+    items = list(program.items)
+    items[idx] = dataclasses.replace(items[idx], **fields)
+    return dataclasses.replace(program, items=tuple(items))
+
+
+def instr_indices(program, op=None):
+    return [i for i, it in enumerate(program.items)
+            if isinstance(it, KviInstr) and (op is None or it.op is op)]
+
+
+# ---------------------------------------------------------------------------
+# diagnostics plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestDiagnostics:
+    def test_code_table_is_consistent(self):
+        for code, (sev, meaning) in CODES.items():
+            assert code.startswith("KVI") and len(code) == 6
+            assert isinstance(sev, Severity) and meaning
+
+    def test_readme_table_covers_every_code(self):
+        import pathlib
+        readme = pathlib.Path(__file__).resolve().parents[2] / "README.md"
+        text = readme.read_text()
+        for code in CODES:
+            assert code in text, f"{code} missing from README table"
+
+    def test_unknown_code_rejected(self):
+        with pytest.raises(ValueError, match="unregistered"):
+            Diagnostic("KVI999", "nope", "p")
+
+    def test_severity_defaults_from_table(self):
+        d = Diagnostic("KVI105", "msg", "p")
+        assert d.severity is Severity.ERROR
+        w = Diagnostic("KVI109", "msg", "p")
+        assert w.severity is Severity.WARNING
+
+    def test_report_partitions_and_gates(self):
+        rep = DiagnosticReport()
+        rep.add("KVI105", "bad window", "p", subject="a")
+        rep.add("KVI109", "cold read", "p", subject="b")
+        assert len(rep.errors) == 1 and len(rep.warnings) == 1
+        assert not rep.ok and not rep.clean
+        assert rep.at_least(Severity.WARNING) == list(rep)
+        with pytest.raises(KviVerificationError) as ei:
+            rep.raise_if()
+        assert "KVI105" in str(ei.value)
+
+    def test_render_and_as_dict_are_stable(self):
+        d = Diagnostic("KVI105", "msg", "prog", item=3, op="kaddv",
+                       subject="item3:dst")
+        assert "KVI105" in d.render() and "prog" in d.render()
+        dd = d.as_dict()
+        assert dd["code"] == "KVI105" and dd["severity"] == "error"
+
+
+# ---------------------------------------------------------------------------
+# structural verifier: one seeded defect per code class
+# ---------------------------------------------------------------------------
+
+
+class TestVerifier:
+    def test_stock_program_is_clean(self):
+        assert verify_program(small_program()).clean
+
+    def test_oob_window_kvi105(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        it = p.items[idx]
+        bad = replace_instr(
+            p, idx, src1=dataclasses.replace(it.src1, offset=9))
+        rep = verify_program(bad)
+        assert "KVI105" in rep.codes and not rep.ok
+
+    def test_elem_bytes_mismatch_kvi106(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        rep = verify_program(replace_instr(p, idx, elem_bytes=2))
+        assert "KVI106" in rep.codes
+
+    def test_mem_transfer_extent_kvi107(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KMEMLD)[0]
+        rep = verify_program(replace_instr(p, idx, length=8))
+        assert "KVI107" in rep.codes
+
+    def test_use_before_def_kvi109_is_warning(self):
+        b = KviProgramBuilder("cold")
+        v = b.vreg("v", 8)
+        w = b.vreg("w", 8)
+        b.kaddv(w, v, v)                   # v never written: defined zeros
+        out = b.mem_out("y", 8)
+        b.kmemstr(out, w)
+        rep = verify_program(b.build())
+        assert "KVI109" in rep.codes
+        assert rep.ok                      # warning, not error
+        assert not rep.clean
+
+    def test_output_never_written_kvi110(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KMEMSTR)[0]
+        items = tuple(it for i, it in enumerate(p.items) if i != idx)
+        rep = verify_program(dataclasses.replace(p, items=items))
+        assert "KVI110" in rep.codes
+
+    def test_duplicate_vreg_name_kvi111(self):
+        p = small_program()
+        vregs = list(p.vregs)
+        clash = VReg(vregs[0].name, vregs[1].id, vregs[1].length,
+                     vregs[1].elem_bytes)
+        rep = verify_program(
+            dataclasses.replace(p, vregs=(vregs[0], clash)))
+        assert "KVI111" in rep.codes
+
+    def test_dangling_ref_kvi103(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        it = p.items[idx]
+        rep = verify_program(replace_instr(
+            p, idx, src2=dataclasses.replace(it.src2, id=77)))
+        assert "KVI103" in rep.codes
+
+    def test_wrong_space_kvi104(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        rep = verify_program(replace_instr(
+            p, idx, src2=Ref("mem", 0, 0)))
+        assert "KVI104" in rep.codes
+
+    def test_degenerate_length_kvi102(self):
+        # KviInstr/VReg construction rejects length <= 0 outright, so
+        # the only seedable degenerate item left is a ScalarBlock
+        from repro.kvi.ir import ScalarBlock
+        p = small_program()
+        rep = verify_program(dataclasses.replace(
+            p, items=p.items + (ScalarBlock(0),)))
+        assert "KVI102" in rep.codes
+
+    def test_ignored_mem_offset_kvi113(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KMEMLD)[0]
+        it = p.items[idx]
+        rep = verify_program(replace_instr(
+            p, idx, src1=dataclasses.replace(it.src1, offset=4)))
+        assert "KVI113" in rep.codes
+        assert rep.ok                      # the MFU ignores it: warning
+
+    def test_mem_init_mismatch_kvi108(self):
+        p = small_program()
+        bad_init = dict(p.mem_init)
+        bad_init[0] = np.arange(4, dtype=np.int32)    # declared 16
+        rep = verify_program(dataclasses.replace(p, mem_init=bad_init))
+        assert "KVI108" in rep.codes
+
+
+# ---------------------------------------------------------------------------
+# hazard analyzer: dependence graph, fusion audit, SPM pressure, races
+# ---------------------------------------------------------------------------
+
+
+class TestDependenceGraph:
+    def test_window_overlap(self):
+        assert windows_overlap((0, 0, 8), (0, 4, 8))
+        assert not windows_overlap((0, 0, 4), (0, 4, 4))
+        assert not windows_overlap((0, 0, 8), (1, 0, 8))   # different vreg
+
+    def test_raw_war_waw_edges(self):
+        b = KviProgramBuilder("dep")
+        h = b.mem_in("x", np.arange(8, dtype=np.int32))
+        v = b.vreg("v", 8)
+        w = b.vreg("w", 8)
+        b.kmemld(v, h)                       # i1 writes v
+        b.kaddv(w, v, v)                     # i2: RAW on v, writes w
+        b.ksvmulsc(v, w, scalar=3)           # i3: RAW on w, WAR+WAW on v
+        out = b.mem_out("y", 8)
+        b.kmemstr(out, v)                    # i4: RAW on v
+        g = dependence_graph(b.build())
+        kinds = g.counts
+        assert kinds["RAW"] >= 3 and kinds["WAR"] >= 1 and kinds["WAW"] >= 1
+
+    def test_disjoint_windows_no_edge(self):
+        b = KviProgramBuilder("disjoint")
+        h = b.mem_in("x", np.arange(16, dtype=np.int32))
+        v = b.vreg("v", 16)
+        w = b.vreg("w", 16)
+        b.kmemld(v, h)
+        b.kaddv(w.view(0, 8), v.view(0, 8), v.view(0, 8))
+        b.kaddv(w.view(8, 8), v.view(8, 8), v.view(8, 8))   # disjoint halves
+        out = b.mem_out("y", 16)
+        b.kmemstr(out, w)
+        g = dependence_graph(b.build())
+        halves = [e for e in g.edges
+                  if e.src_window[1] != e.dst_window[1]
+                  and e.src_window[0] == e.dst_window[0]
+                  and e.kind != "RAW"]
+        assert halves == []
+
+    def test_stock_kernels_build_quickly(self):
+        # frontier pruning keeps paper-size graphs tractable
+        g = dependence_graph(build_target("conv32"))
+        assert len(g.edges) > 0
+
+
+class TestFusionAudit:
+    def optimized(self):
+        p = optimize_program(small_program())
+        assert isinstance(p.meta.get(META_KEY), FusionPlan)
+        return p
+
+    def test_planner_output_is_legal(self):
+        assert analyze_program(self.optimized()).clean
+
+    def test_weld_of_mem_op_kvi201(self):
+        p = self.optimized()
+        plan = p.meta[META_KEY]
+        mem_idx = instr_indices(p, KviOp.KMEMLD)[0]
+        region = plan.regions[0]
+        bad_region = dataclasses.replace(
+            region, items=tuple(sorted(region.items + (mem_idx,))))
+        bad_plan = dataclasses.replace(
+            plan, regions=(bad_region,) + plan.regions[1:])
+        meta = dict(p.meta)
+        meta[META_KEY] = bad_plan
+        rep = analyze_program(dataclasses.replace(p, meta=meta))
+        assert "KVI201" in rep.codes
+
+    def test_invalid_indices_kvi204(self):
+        p = self.optimized()
+        plan = p.meta[META_KEY]
+        region = plan.regions[0]
+        bad_region = dataclasses.replace(region, items=(999,))
+        meta = dict(p.meta)
+        meta[META_KEY] = dataclasses.replace(
+            plan, regions=(bad_region,))
+        rep = analyze_program(dataclasses.replace(p, meta=meta))
+        assert "KVI204" in rep.codes
+
+    def test_stale_read_weld_kvi203(self):
+        # w[0:8] written, then read at the overlapping window w[4:8]:
+        # legal sequentially, illegal inside one gather-first region
+        b = KviProgramBuilder("weld")
+        h = b.mem_in("x", np.arange(16, dtype=np.int32))
+        v = b.vreg("v", 16)
+        w = b.vreg("w", 16)
+        u = b.vreg("u", 16)
+        b.kmemld(v, h)
+        b.kaddv(w.view(0, 8), v.view(0, 8), v.view(0, 8))
+        b.kaddv(u.view(0, 8), w.view(4, 8), v.view(4, 8))
+        out = b.mem_out("y", 16)
+        b.kmemstr(out, u)
+        p = b.build()
+        i1, i2 = instr_indices(p, KviOp.KADDV)
+        from repro.kvi.passes.fusion import FusedRegion
+        region = FusedRegion(items=(i1, i2), length=8, elem_bytes=4,
+                             ops=(), inputs=(), outputs=(), n_slots=0)
+        meta = dict(p.meta)
+        meta[META_KEY] = FusionPlan(regions=(region,))
+        rep = analyze_program(dataclasses.replace(p, meta=meta))
+        assert "KVI203" in rep.codes
+
+
+class TestSpmPressure:
+    def test_estimate_matches_allocator_decision(self):
+        from repro.kvi.lowering import SpmOverflowError, allocate_vregs
+        progs = [small_program(), build_target("conv32"),
+                 build_target("fft256")]
+        for kb in (1, 2, 4, 8, 64):
+            cfg = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=kb)
+            for p in progs:
+                est = spm_pressure(p, cfg)
+                try:
+                    allocate_vregs(p, cfg)
+                    fits = True
+                except SpmOverflowError:
+                    fits = False
+                assert est.fits == fits, (p.name, kb)
+
+    def test_over_pressure_kvi301(self):
+        tiny = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=1)
+        rep = check_spm_pressure(build_target("conv32"), tiny)
+        assert "KVI301" in rep.codes
+        assert not rep.ok
+
+
+def _writer(name, value, out_name="y", n=8):
+    b = KviProgramBuilder(name)
+    h = b.mem_in("x_" + name, np.full(n, value, dtype=np.int32))
+    v = b.vreg("v", n)
+    b.kmemld(v, h)
+    if name.endswith("_mul"):              # structurally distinct pair
+        b.ksvmulsc(v, v, scalar=3)
+    out = b.mem_out(out_name, n)
+    b.kmemstr(out, v)
+    return b.build()
+
+
+class TestWorkloadChecks:
+    def test_write_write_race_kvi210(self):
+        wl = KviWorkload.composite(
+            {0: [_writer("a", 1)], 1: [_writer("b_mul", 2)]})
+        rep = check_workload(wl)
+        assert "KVI210" in rep.codes
+
+    def test_same_hart_is_sequential_not_a_race(self):
+        wl = KviWorkload.composite(
+            {0: [_writer("a", 1), _writer("b_mul", 2)]})
+        assert check_workload(wl).clean
+
+    def test_homogeneous_instances_exempt(self):
+        # equal structural signatures = data instances; the workload
+        # model gives each its own output slot
+        wl = KviWorkload.replicate(_writer("a", 1), 3)
+        assert check_workload(wl).clean
+
+    def test_non_shared_scheme_downgrades(self):
+        wl = KviWorkload.composite(
+            {0: [_writer("a", 1)], 1: [_writer("b_mul", 2)]})
+        rep = check_workload(wl, shared_scheme=False)
+        assert "KVI210" not in rep.codes
+
+    def test_read_write_sharing_kvi211(self):
+        writer = _writer("a", 1, out_name="shared_buf")
+        b = KviProgramBuilder("reader")
+        h = b.mem_in("shared_buf", np.zeros(8, dtype=np.int32))
+        v = b.vreg("v", 8)
+        b.kmemld(v, h)
+        out = b.mem_out("z", 8)
+        b.kmemstr(out, v)
+        wl = KviWorkload.composite({0: [writer], 1: [b.build()]})
+        rep = check_workload(wl)
+        assert "KVI211" in rep.codes
+        assert rep.ok                      # warning severity
+
+    def test_hart_pin_oob_kvi302(self):
+        wl = KviWorkload.composite({5: [_writer("a", 1)]})
+        cfg = KlessydraConfig("t", M=1, F=1, D=4, spm_kbytes=32)
+        rep = check_workload(wl, config=cfg)
+        assert "KVI302" in rep.codes
+
+    def test_analyze_workload_aggregates(self):
+        wl = KviWorkload.composite(
+            {0: [_writer("a", 1)], 1: [_writer("b_mul", 2)]})
+        rep = analyze_workload(wl)
+        assert "KVI210" in rep.codes
+
+
+# ---------------------------------------------------------------------------
+# stock cleanliness: the zero-false-positive contract
+# ---------------------------------------------------------------------------
+
+
+class TestStockCleanliness:
+    @pytest.mark.parametrize("name", sorted(REGISTERED_TARGETS))
+    def test_registered_target_is_clean(self, name):
+        target = build_target(name)
+        cfg = KlessydraConfig("lint", M=1, F=1, D=4, spm_kbytes=64)
+        if isinstance(target, KviProgram):
+            rep = analyze_program(target, config=cfg)
+        else:
+            rep = analyze_workload(target, config=cfg)
+        assert rep.clean, rep.render_text()
+
+    def test_optimized_programs_stay_clean(self):
+        for name in ("conv32", "fft256", "matmul64"):
+            p = optimize_program(build_target(name))
+            rep = analyze_program(p)
+            assert rep.clean, rep.render_text()
+
+    def test_registry_listing(self):
+        names = registered_targets()
+        assert "conv32" in names and "composite_paper" in names
+        with pytest.raises(KeyError, match="unknown lint target"):
+            build_target("nope")
+
+
+# ---------------------------------------------------------------------------
+# pipeline verify mode: pass attribution
+# ---------------------------------------------------------------------------
+
+
+def _clobber_window(program):
+    """A 'pass' that miscompiles: shifts a vector op's dst off the end
+    of its vreg."""
+    items = list(program.items)
+    for k, it in enumerate(items):
+        if (isinstance(it, KviInstr) and it.op is KviOp.KADDV):
+            items[k] = dataclasses.replace(
+                it, dst=dataclasses.replace(it.dst, offset=10 ** 6))
+            break
+    return dataclasses.replace(program, items=tuple(items))
+
+
+class TestPipelineVerify:
+    def test_attributes_injected_bug_to_the_pass(self):
+        pipe = PassPipeline.from_spec(
+            ("copy_prop", _clobber_window, "dce"), verify=True)
+        with pytest.raises(PassVerificationError) as ei:
+            pipe.run(small_program())
+        assert ei.value.pass_name == "_clobber_window"
+        assert "KVI105" in ei.value.report.codes
+
+    def test_clean_program_passes_verified_pipeline(self):
+        out = PassPipeline.from_spec(None, verify=True).run(
+            small_program())
+        assert analyze_program(out).clean
+
+    def test_broken_input_attributed_to_input(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        bad = replace_instr(
+            p, idx,
+            src1=dataclasses.replace(p.items[idx].src1, offset=10 ** 6))
+        with pytest.raises(PassVerificationError) as ei:
+            PassPipeline.from_spec(None, verify=True).run(bad)
+        assert ei.value.pass_name == "<input>"
+
+    def test_from_spec_upgrades_existing_pipeline(self):
+        base = PassPipeline.from_spec(None)
+        assert not base.verify
+        up = PassPipeline.from_spec(base, verify=True)
+        assert up.verify and up.passes == base.passes
+
+
+# ---------------------------------------------------------------------------
+# backend gate
+# ---------------------------------------------------------------------------
+
+
+class TestBackendVerifyGate:
+    def bad_program(self):
+        p = small_program()
+        idx = instr_indices(p, KviOp.KADDV)[0]
+        return replace_instr(
+            p, idx,
+            src1=dataclasses.replace(p.items[idx].src1, offset=10 ** 6))
+
+    def test_ctor_gate_rejects(self):
+        be = get_backend("oracle", verify=True)
+        with pytest.raises(KviVerificationError) as ei:
+            be.run(self.bad_program())
+        assert "KVI105" in str(ei.value)
+
+    def test_per_call_override(self):
+        be = get_backend("oracle")
+        wl = KviWorkload.single(self.bad_program())
+        with pytest.raises(KviVerificationError):
+            be.run_workload(wl, verify=True)
+
+    def test_clean_program_runs_verified(self):
+        be = get_backend("oracle", verify=True)
+        res = be.run(small_program())
+        x = np.arange(16, dtype=np.int32)
+        np.testing.assert_array_equal(res.outputs["y"], x * 2 + x)
+
+    def test_cyclesim_gate(self):
+        be = get_backend("cyclesim", verify=True)
+        with pytest.raises(KviVerificationError):
+            be.run_workload(KviWorkload.single(self.bad_program()))
+
+
+# ---------------------------------------------------------------------------
+# DSE preflight integration
+# ---------------------------------------------------------------------------
+
+
+class TestDsePreflight:
+    def test_static_rejection_mentions_kvi301(self):
+        from repro.kvi.dse.space import DesignPoint, preflight_point
+        tiny = DesignPoint("shared", 1, 1, 4, spm_kbytes=1)
+        reason = preflight_point(tiny, [build_target("conv32")])
+        assert reason is not None and "KVI301" in reason
+
+    def test_point_record_carries_static_spm(self):
+        from repro.kvi.dse.space import DesignPoint
+        from repro.kvi.dse.sweep import run_point
+        pt = DesignPoint("shared", 1, 1, 4, spm_kbytes=64)
+        rec = run_point(pt, {"demo": small_program()}, composite=False)
+        assert rec.ok
+        spm = rec.kernels["demo"]["static_spm"]
+        assert spm["fits"] and spm["peak_live_bytes"] > 0
+        assert "static_spm" in json.dumps(rec.as_dict())
+
+    def test_estimate_agrees_on_smoke_points(self):
+        # acceptance criterion: static estimate == allocator verdict on
+        # every smoke-space point, for every smoke kernel
+        from repro.kvi.dse.report import smoke_space
+        from repro.kvi.dse.sweep import paper_kernel_factory
+        from repro.kvi.lowering import SpmOverflowError, allocate_vregs
+        factory = paper_kernel_factory(smoke=True)
+        kernels_by_prec = {}
+        for pt in smoke_space().points():
+            cfg = pt.config()
+            kernels = kernels_by_prec.setdefault(
+                pt.precision_bits, factory(pt.precision_bits))
+            for name, prog in kernels.items():
+                est = spm_pressure(prog, cfg)
+                try:
+                    allocate_vregs(prog, cfg)
+                    fits = True
+                except SpmOverflowError:
+                    fits = False
+                assert est.fits == fits, (pt.name, name)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+class TestCli:
+    def run_cli(self, argv, capsys):
+        from repro.kvi.analysis.__main__ import main
+        code = main(argv)
+        return code, capsys.readouterr().out
+
+    def test_list(self, capsys):
+        code, out = self.run_cli(["--list"], capsys)
+        assert code == 0 and "conv32" in out
+
+    def test_all_text_clean(self, capsys):
+        code, out = self.run_cli(["--all"], capsys)
+        assert code == 0
+        assert "clean" in out and "0 error(s)" in out
+
+    def test_json_format(self, capsys):
+        code, out = self.run_cli(
+            ["conv32", "--format", "json"], capsys)
+        assert code == 0
+        payload = json.loads(out)
+        assert payload["n_errors"] == 0
+        assert "conv32" in payload["targets"]
+
+    def test_unknown_target_usage_error(self, capsys):
+        from repro.kvi.analysis.__main__ import main
+        with pytest.raises(SystemExit) as ei:
+            main(["definitely_not_registered"])
+        assert ei.value.code == 2
+
+    def test_fail_on_warning_gate(self, capsys):
+        # a tiny SPM makes every target over-pressure: exit 1 on error
+        code, out = self.run_cli(
+            ["conv32", "--spm-kbytes", "1"], capsys)
+        assert code == 1 and "KVI301" in out
+
+    def test_fail_on_never_always_exits_zero(self, capsys):
+        code, _ = self.run_cli(
+            ["conv32", "--spm-kbytes", "1", "--fail-on", "never"],
+            capsys)
+        assert code == 0

@@ -301,7 +301,7 @@ class TestSweep:
         by_name = {r.point.name: r for r in tiny_sweep.records}
         for d in (2, 8):
             for prec in (8, 32):
-                def cyc(scheme, mf):
+                def cyc(scheme, mf, d=d, prec=prec):
                     return by_name[
                         f"{scheme}_M{mf[0]}F{mf[1]}_D{d}_b{prec}"
                         f"_spm64"].kernels["conv"]["cycles"]

@@ -36,7 +36,7 @@ class TestBuilder:
     def test_instrs_are_frozen(self):
         p = small_program()
         instr = [i for i in p.items if isinstance(i, KviInstr)][0]
-        with pytest.raises(Exception):
+        with pytest.raises(AttributeError):   # FrozenInstanceError
             instr.length = 99
 
     def test_unknown_length_mismatch_rejected(self):
@@ -64,6 +64,72 @@ class TestBuilder:
         with pytest.raises(ValueError):
             b.kdotp(d, a, a)          # dst view of length 8
         b.kdotp(d[3], a, a)           # single-element view is fine
+
+
+class TestConstructionValidation:
+    """Bad refs/views/names die at construction, naming the operand."""
+
+    def test_negative_ref_offset_rejected(self):
+        with pytest.raises(ValueError,
+                           match="negative offset -1 in vreg operand #0"):
+            Ref("vreg", 0, -1)
+
+    def test_vreg_degenerate_length_rejected(self):
+        b = KviProgramBuilder("bad")
+        with pytest.raises(ValueError,
+                           match=r"vreg 'a': length must be > 0, got 0"):
+            b.vreg("a", 0)
+        with pytest.raises(ValueError,
+                           match=r"vreg 'a': length must be > 0, got -4"):
+            b.vreg("a", -4)
+
+    def test_vreg_elem_bytes_rejected(self):
+        b = KviProgramBuilder("bad")
+        with pytest.raises(ValueError, match=r"elem_bytes must be 1/2/4"):
+            b.vreg("a", 8, elem_bytes=3)
+
+    def test_view_negative_offset_rejected(self):
+        b = KviProgramBuilder("bad")
+        a = b.vreg("a", 8)
+        with pytest.raises(ValueError,
+                           match=r"view of vreg 'a': negative offset -2"):
+            a.view(-2, 4)
+
+    def test_view_degenerate_length_rejected(self):
+        b = KviProgramBuilder("bad")
+        a = b.vreg("a", 8)
+        with pytest.raises(ValueError,
+                           match=r"view of vreg 'a': length must be > 0"):
+            a.view(0, 0)
+
+    def test_view_oob_names_vreg(self):
+        b = KviProgramBuilder("bad")
+        a = b.vreg("a", 8)
+        with pytest.raises(IndexError,
+                           match=r"view \[4:12\) outside vreg 'a' of "
+                                 r"length 8"):
+            a.view(4, 8)
+
+    def test_duplicate_vreg_name_rejected(self):
+        b = KviProgramBuilder("dups")
+        b.vreg("v", 8)
+        with pytest.raises(ValueError) as ei:
+            b.vreg("v", 16)
+        assert str(ei.value) == "duplicate vreg name 'v' in program 'dups'"
+
+    def test_duplicate_mem_name_rejected(self):
+        b = KviProgramBuilder("dups")
+        b.mem_in("x", np.arange(8, dtype=np.int32))
+        with pytest.raises(ValueError) as ei:
+            b.mem_out("x", 8)
+        assert str(ei.value) == \
+            "duplicate memory buffer name 'x' in program 'dups'"
+
+    def test_vreg_and_mem_namespaces_are_separate(self):
+        # stock matmul legitimately has both a mem "B" and a vreg "B"
+        b = KviProgramBuilder("ok")
+        b.mem_in("B", np.arange(8, dtype=np.int32))
+        b.vreg("B", 8)                 # must not raise
 
 
 class TestLowering:

@@ -1,0 +1,165 @@
+"""Fuzz-oracle coverage for the static verifier.
+
+Property: for any mutant of a known-good program, if executing it makes
+a backend raise, or makes the oracle and cycle-sim backends disagree on
+functional outputs, the verifier must flag it (one-directional — the
+verifier may also flag mutants the backends happen to tolerate). And on
+every stock program the verifier is silent.
+
+Mutations are applied through ``dataclasses.replace`` on the frozen IR
+(construction-time validation blocks building these directly) — exactly
+the corruption surface a buggy pass has. A deterministic sweep runs the
+whole catalog always; a hypothesis variant samples the same catalog
+when hypothesis is installed (it degrades to a skip otherwise)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs.base import KlessydraConfig
+from repro.kvi import KviInstr, KviProgramBuilder
+from repro.kvi.analysis import verify_program
+from repro.kvi.backend import get_backend
+from repro.kvi.ir import VReg
+from repro.kvi.workload import KviWorkload
+
+CFG = KlessydraConfig("fuzz", M=1, F=1, D=4, spm_kbytes=64)
+
+
+def base_programs():
+    progs = []
+
+    b = KviProgramBuilder("mix")
+    h = b.mem_in("x", np.arange(16, dtype=np.int32))
+    v = b.vreg("v", 16)
+    w = b.vreg("w", 16)
+    acc = b.vreg("acc", 4)
+    b.kmemld(v, h)
+    b.ksvmulsc(w, v, scalar=3)
+    b.kaddv(w, w, v)
+    b.kdotp(acc[0], w, v)
+    out = b.mem_out("y", 16)
+    b.kmemstr(out, w)
+    progs.append(b.build())
+
+    from repro.kvi.programs import conv2d_program, fft_program
+    rng = np.random.default_rng(7)
+    progs.append(conv2d_program(
+        rng.integers(-64, 64, (6, 6)).astype(np.int32),
+        rng.integers(-8, 8, (3, 3)).astype(np.int32), shift=3))
+    progs.append(fft_program(
+        rng.integers(-64, 64, 16).astype(np.int32),
+        rng.integers(-64, 64, 16).astype(np.int32)))
+    return progs
+
+
+def mutants(program):
+    """(label, mutant) catalog: every structural corruption class the
+    verifier promises to catch, seeded at every applicable site."""
+    out = []
+    instr_at = [(i, it) for i, it in enumerate(program.items)
+                if isinstance(it, KviInstr)]
+
+    def with_item(idx, instr):
+        items = list(program.items)
+        items[idx] = instr
+        return dataclasses.replace(program, items=tuple(items))
+
+    for idx, it in instr_at[:6]:        # bound the catalog per program
+        for role in ("dst", "src1", "src2"):
+            ref = getattr(it, role)
+            if ref is None or ref.space != "vreg":
+                continue
+            reg = program.vregs[ref.id]
+            out.append((
+                f"oob:{idx}:{role}",
+                with_item(idx, dataclasses.replace(
+                    it, **{role: dataclasses.replace(
+                        ref, offset=ref.offset + reg.length)}))))
+            out.append((
+                f"dangle:{idx}:{role}",
+                with_item(idx, dataclasses.replace(
+                    it, **{role: dataclasses.replace(ref, id=57)}))))
+        if it.elem_bytes == 4:
+            out.append((f"elem:{idx}",
+                        with_item(idx, dataclasses.replace(
+                            it, elem_bytes=2))))
+
+    for vi, reg in enumerate(program.vregs):
+        if reg.length < 2:
+            continue
+        shrunk = VReg(reg.name, reg.id, reg.length // 2, reg.elem_bytes)
+        vregs = tuple(shrunk if i == vi else r
+                      for i, r in enumerate(program.vregs))
+        out.append((f"shrink:{reg.name}",
+                    dataclasses.replace(program, vregs=vregs)))
+    return out
+
+
+def execute(backend, program):
+    """("ok", outputs) or ("raise", None)."""
+    try:
+        res = backend.run_workload(
+            KviWorkload.single(program)).entry_result(0)
+        return "ok", {k: np.asarray(v) for k, v in res.outputs.items()}
+    except Exception:
+        return "raise", None
+
+
+def backends():
+    return (get_backend("oracle", passes=()),
+            get_backend("cyclesim", passes=(), schemes={"fuzz": CFG},
+                        replicate_harts=False))
+
+
+def misbehaves(program):
+    """True when any backend raises or the two backends disagree."""
+    oracle, sim = backends()
+    s1, o1 = execute(oracle, program)
+    s2, o2 = execute(sim, program)
+    if s1 == "raise" or s2 == "raise":
+        return True
+    if sorted(o1) != sorted(o2):
+        return True
+    return any(not np.array_equal(o1[k], o2[k]) for k in o1)
+
+
+class TestFuzzOracle:
+    @pytest.mark.parametrize("pi", range(3))
+    def test_stock_programs_clean_and_agree(self, pi):
+        p = base_programs()[pi]
+        assert verify_program(p).clean, verify_program(p).render_text()
+        assert not misbehaves(p)
+
+    @pytest.mark.parametrize("pi", range(3))
+    def test_every_misbehaving_mutant_is_flagged(self, pi):
+        p = base_programs()[pi]
+        caught = missed = benign = 0
+        for label, m in mutants(p):
+            rep = verify_program(m)
+            if misbehaves(m):
+                if rep.clean:
+                    missed += 1
+                    pytest.fail(
+                        f"mutant {label} of {p.name!r} breaks a backend "
+                        f"but the verifier is silent")
+                caught += 1
+            else:
+                benign += 1
+        # the catalog must actually exercise the property
+        assert caught >= 3, (caught, benign, missed)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestFuzzOracleHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2), st.data())
+    def test_sampled_mutants_hold_the_property(self, pi, data):
+        p = base_programs()[pi]
+        catalog = mutants(p)
+        label, m = catalog[data.draw(
+            st.integers(min_value=0, max_value=len(catalog) - 1))]
+        rep = verify_program(m)
+        if misbehaves(m):
+            assert not rep.clean, f"mutant {label} unflagged"

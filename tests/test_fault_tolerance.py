@@ -66,7 +66,7 @@ class TestStragglers:
     def test_flags_persistent_outlier(self):
         det = StragglerDetector([0, 1, 2, 3], k=3.0, patience=3)
         flagged = []
-        for step in range(5):
+        for _step in range(5):
             times = {0: 1.0, 1: 1.02, 2: 0.98, 3: 5.0}
             flagged = det.observe(times)
         assert flagged == [3]

@@ -49,7 +49,7 @@ def test_training_overfits_fixed_batch():
     batch = {"tokens": jnp.asarray(seq[:, :-1]),
              "labels": jnp.asarray(seq[:, 1:])}
     first = None
-    for i in range(120):
+    for _ in range(120):
         params, opt, m = step_fn(params, opt, batch)
         if first is None:
             first = float(m["loss"])
