@@ -23,15 +23,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
-                         "roofline,kvi_batch,kvi_passes,kvi_dse")
+                         "roofline,kvi_batch,kvi_passes,kvi_dse,"
+                         "kvi_serve")
     ap.add_argument("--seed", type=int, default=0,
                     help="input-data seed for seed-aware benchmarks")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_kvi_batch, bench_kvi_dse, bench_kvi_passes,
-                            fig2_dlp_tlp, fig3_exec_time, fig4_energy,
-                            kernel_micro, roofline_report, table2_cycles,
-                            table3_filters)
+                            bench_kvi_serve, fig2_dlp_tlp, fig3_exec_time,
+                            fig4_energy, kernel_micro, roofline_report,
+                            table2_cycles, table3_filters)
     benches = {
         "table2": (table2_cycles,
                    lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
@@ -59,6 +60,13 @@ def main(argv=None) -> int:
                     f"{r['checks']['pareto_ordering_ok']},"
                     "subword_2x="
                     f"{r['checks']['subword_2x_on_mfu_bound']}"),
+        "kvi_serve": (bench_kvi_serve,
+                      lambda r: "speedup="
+                      f"{r['checks']['batching_speedup_x']}x,"
+                      "steady_hit_rate_1="
+                      f"{r['checks']['steady_hit_rate_1']},"
+                      "deterministic="
+                      f"{r['checks']['deterministic']}"),
     }
     only = [s for s in args.only.split(",") if s]
     rows = []

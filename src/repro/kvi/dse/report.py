@@ -199,10 +199,11 @@ def hart_utilization_by_scheme(records: List[PointRecord], kernel: str,
 def pallas_summary(records: List[PointRecord], kernel: str,
                    ) -> List[Dict[str, object]]:
     """The walltime axis, one row per measured (precision, passes)
-    class: real Pallas walltime + compiled ``pallas_call`` count next to
-    the best simulated cycle count of the class's points — the
-    cycles-vs-walltime trade the co-design argument needs measured, not
-    modeled."""
+    class: real Pallas walltime — split into one-time compile and warm
+    steady-state when the sweep measured both — plus the compiled
+    ``pallas_call`` count next to the best simulated cycle count of the
+    class's points — the cycles-vs-walltime trade the co-design argument
+    needs measured, not modeled."""
     rows: Dict[tuple, Dict[str, object]] = {}
     for r in records:
         k = _measures(r).get(kernel)
@@ -219,6 +220,9 @@ def pallas_summary(records: List[PointRecord], kernel: str,
                 "pallas_calls": k["pallas_calls"],
                 "best_cycles": int(k["cycles"]),
                 "n_points": 0}
+            for col in ("pallas_compile_s", "pallas_steady_s"):
+                if col in k:
+                    row[col] = k[col]
         row["best_cycles"] = min(row["best_cycles"], int(k["cycles"]))
         row["n_points"] += 1
     return [rows[key] for key in sorted(
@@ -384,10 +388,12 @@ def render_markdown(report: Dict[str, object]) -> str:
         if pallas:
             lines += ["### Pallas walltime (measured, homogeneous "
                       "batch; one measurement per precision/pipeline "
-                      "class)", "",
-                      "| bits | pipeline | walltime (s) | pallas_calls "
+                      "class; compile = one-time cost, steady = warm "
+                      "per-batch cost)", "",
+                      "| bits | pipeline | walltime (s) | compile (s) "
+                      "| steady (s) | pallas_calls "
                       "| best sim cycles | points |",
-                      "|---|---|---|---|---|---|"]
+                      "|---|---|---|---|---|---|---|---|"]
             for row in pallas:
                 pipe = "default" if row["passes"] is None else \
                     ("raw" if row["passes"] == [] else
@@ -395,6 +401,8 @@ def render_markdown(report: Dict[str, object]) -> str:
                 lines.append(
                     f"| {row['precision_bits']} | {pipe} | "
                     f"{row['pallas_walltime_s']} | "
+                    f"{row.get('pallas_compile_s', '-')} | "
+                    f"{row.get('pallas_steady_s', '-')} | "
                     f"{row['pallas_calls']} | {row['best_cycles']} | "
                     f"{row['n_points']} |")
             lines.append("")

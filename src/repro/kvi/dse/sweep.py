@@ -57,18 +57,19 @@ POINT_KEY = "dse"
 #: rather than what it measured) — so executor-equivalence can be
 #: asserted byte-for-byte
 VOLATILE_KEYS = frozenset({"wall_s", "walltime_s", "pallas_walltime_s",
+                           "pallas_compile_s", "pallas_steady_s",
                            "total_wall_s", "executor"})
 
 
-def scrub_volatile(obj):
-    """``obj`` with every :data:`VOLATILE_KEYS` entry removed,
-    recursively — the canonical (timing- and executor-free) view of a
-    sweep."""
+def scrub_volatile(obj, keys: frozenset = VOLATILE_KEYS):
+    """``obj`` with every ``keys`` entry removed, recursively — the
+    canonical (timing- and executor-free) view of a sweep. The serving
+    engine reuses this with its own key set."""
     if isinstance(obj, dict):
-        return {k: scrub_volatile(v) for k, v in obj.items()
-                if k not in VOLATILE_KEYS}
+        return {k: scrub_volatile(v, keys) for k, v in obj.items()
+                if k not in keys}
     if isinstance(obj, (list, tuple)):
-        return [scrub_volatile(v) for v in obj]
+        return [scrub_volatile(v, keys) for v in obj]
     return obj
 
 
@@ -165,7 +166,8 @@ class SweepResult:
     def csv_rows(self) -> List[Dict[str, object]]:
         """Flat (point x kernel) rows for spreadsheet analysis. With
         Pallas measurement on, rows gain ``pallas_walltime_s`` /
-        ``pallas_calls`` columns (blank for unmeasured points)."""
+        ``pallas_compile_s`` / ``pallas_steady_s`` / ``pallas_calls``
+        columns (blank for unmeasured points)."""
         with_pallas = self.measured_pallas
         rows = []
         for r in self.records:
@@ -188,9 +190,9 @@ class SweepResult:
                         [h["utilization"]
                          for h in k["hart_utilization"]])), 4))
                 if with_pallas:
-                    row["pallas_walltime_s"] = k.get("pallas_walltime_s",
-                                                     "")
-                    row["pallas_calls"] = k.get("pallas_calls", "")
+                    for col in ("pallas_walltime_s", "pallas_compile_s",
+                                "pallas_steady_s", "pallas_calls"):
+                        row[col] = k.get(col, "")
                 rows.append(row)
         return rows
 
@@ -294,6 +296,14 @@ def measure_pallas_points(records: Sequence[PointRecord],
     workload) and attach ``pallas_walltime_s`` / ``pallas_calls`` to the
     point's kernel measures.
 
+    Each workload runs **twice** against one instance-scoped
+    :class:`~repro.kvi.pallas_backend.KernelCache`: the first (cold)
+    iteration traces and compiles, the second (warm) replays compiled
+    executables only. The split lands as ``pallas_compile_s`` (cold
+    minus warm, the one-time cost) and ``pallas_steady_s`` (warm — what
+    a serving loop pays per batch); ``pallas_walltime_s`` stays the cold
+    total for continuity with earlier sweeps.
+
     Pallas execution does not model the swept hardware (no D, SPM or
     scheme effect — the TPU grid is the parallelism), so points sharing
     ``(precision_bits, passes, harts)`` are *one* measurement class:
@@ -304,7 +314,23 @@ def measure_pallas_points(records: Sequence[PointRecord],
     from repro.kvi.pallas_backend import PallasBackend
     from repro.kvi.workload import KviWorkload
 
+    def _measure(backend, wl) -> Dict[str, object]:
+        cold = backend.run_workload(wl)
+        warm = backend.run_workload(wl)
+        if warm.pallas_calls != cold.pallas_calls:
+            raise RuntimeError(
+                f"warm-up changed the kernel-launch count for "
+                f"{wl.name!r}: {cold.pallas_calls} cold vs "
+                f"{warm.pallas_calls} warm")
+        cold_s = float(cold.meta["wall_s"])
+        warm_s = float(warm.meta["wall_s"])
+        return {"pallas_walltime_s": round(cold_s, 4),
+                "pallas_compile_s": round(max(cold_s - warm_s, 0.0), 4),
+                "pallas_steady_s": round(warm_s, 4),
+                "pallas_calls": cold.pallas_calls}
+
     classes: Dict[tuple, Dict[str, Dict[str, object]]] = {}
+    cache_totals = {"hits": 0, "misses": 0}
     measured_points = 0
     for rec in records:
         if not (rec.ok and rec.point.measure_pallas):
@@ -317,23 +343,20 @@ def measure_pallas_points(records: Sequence[PointRecord],
             backend = PallasBackend(passes=())   # plans already attached
             per: Dict[str, Dict[str, object]] = {}
             for name, prog in kernels.items():
-                wl = KviWorkload.replicate(prog, harts)
-                res = backend.run_workload(wl)
-                per[name] = {
-                    "pallas_walltime_s": round(res.meta["wall_s"], 4),
-                    "pallas_calls": res.pallas_calls}
+                per[name] = _measure(
+                    backend, KviWorkload.replicate(prog, harts))
             if composite and harts >= len(kernels):
                 wl = KviWorkload.composite(
                     {h: [p] for h, p in enumerate(kernels.values())},
                     name="composite")
-                res = backend.run_workload(wl)
-                per["composite"] = {
-                    "pallas_walltime_s": round(res.meta["wall_s"], 4),
-                    "pallas_calls": res.pallas_calls}
+                per["composite"] = _measure(backend, wl)
             classes[key] = per
+            cache_totals["hits"] += backend.kernel_cache.hits
+            cache_totals["misses"] += backend.kernel_cache.misses
             if emit:
                 cells = " ".join(
-                    f"{k}={v['pallas_walltime_s']}s/"
+                    f"{k}={v['pallas_compile_s']}+"
+                    f"{v['pallas_steady_s']}s/"
                     f"{v['pallas_calls']}calls"
                     for k, v in per.items())
                 emit(f"pallas[b{key[0]} passes={key[1]} "
@@ -346,7 +369,8 @@ def measure_pallas_points(records: Sequence[PointRecord],
                 target.update(measures)
         measured_points += 1
     return {"n_measured_points": measured_points,
-            "n_measurement_classes": len(classes)}
+            "n_measurement_classes": len(classes),
+            "compile_cache": cache_totals}
 
 
 def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],

@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,52 @@ SlotOp = Tuple[str, int, int, Optional[int], int]
 
 _UNSIGNED = {jnp.int8.dtype: jnp.uint8, jnp.int16.dtype: jnp.uint16,
              jnp.int32.dtype: jnp.uint32}
+
+
+@dataclass
+class KernelCache:
+    """Compiled-call cache: slot-program structure -> a ``jax.jit``-wrapped
+    callable closing over its ``pl.pallas_call`` (or vmapped reduction
+    kernel). Keys carry everything baked into the trace — the op/slot
+    program, batch shape, block split, dtype and interpret flag — so a hit
+    is exactly a compiled executable reuse.
+
+    An eager interpret-mode ``pallas_call`` re-traces on every invocation
+    (~100 ms for even a tiny fused segment); a warm jitted call costs tens
+    of microseconds. Scoped to a :class:`PallasBackend` instance by
+    default, so repeated ``run_workload`` calls — the serving engine's
+    steady-state traffic, the DSE's warm-up iterations — pay zero
+    recompiles; pass one cache to several backends to share it wider.
+
+    ``misses`` counts builds (compiles), ``hits`` compiled-call reuses.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    _fns: Dict[tuple, Callable] = field(default_factory=dict)
+
+    def get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    def clear(self) -> None:
+        """Drop every compiled entry and reset the counters."""
+        self._fns.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._fns)}
 
 
 def apply_vop(op: str, a, b, imm: int):
@@ -99,6 +146,48 @@ def _fused_kernel(*refs, program: Tuple[SlotOp, ...], in_slots, out_slots,
         r[...] = slots[s]
 
 
+def _make_fused_caller(program: Tuple[SlotOp, ...], in_slots: tuple,
+                       out_slots: tuple, n_slots: int, N: Optional[int],
+                       n: int, bl: int, dt, interp: bool) -> Callable:
+    """A callable running the fused slot program as one ``pl.pallas_call``
+    over flat ``(n,)`` vectors (``N is None``) or an ``(N, n)`` batch.
+    Everything shape- or structure-dependent is closed over, so the
+    callable is jit-cacheable by identity (:class:`KernelCache`)."""
+    grid = n // bl
+    kernel = functools.partial(_fused_kernel, program=program,
+                               in_slots=in_slots, out_slots=out_slots,
+                               n_slots=n_slots)
+
+    def call(*arrs):
+        if N is not None:
+            outs = pl.pallas_call(
+                kernel,
+                grid=(N, grid),
+                in_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
+                          for _ in arrs],
+                out_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
+                           for _ in out_slots],
+                out_shape=[jax.ShapeDtypeStruct((N, grid, bl), dt)
+                           for _ in out_slots],
+                interpret=interp,
+            )(*[x.reshape(N, grid, bl) for x in arrs])
+            return [o.reshape(N, n) for o in outs]
+        outs = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))
+                      for _ in arrs],
+            out_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))
+                       for _ in out_slots],
+            out_shape=[jax.ShapeDtypeStruct((grid, bl), dt)
+                       for _ in out_slots],
+            interpret=interp,
+        )(*[x.reshape(grid, bl) for x in arrs])
+        return [o.reshape(n) for o in outs]
+
+    return call
+
+
 def fused_elementwise_call(program: Sequence[SlotOp],
                            inputs: Sequence[Tuple[int, jax.Array]],
                            out_slots: Sequence[int],
@@ -106,6 +195,7 @@ def fused_elementwise_call(program: Sequence[SlotOp],
                            block: int = 1024,
                            interpret: Optional[bool] = None,
                            batched: bool = False,
+                           cache: Optional[KernelCache] = None,
                            ) -> List[jax.Array]:
     """Run an element-wise slot program as one fused ``pl.pallas_call``.
 
@@ -116,6 +206,12 @@ def fused_elementwise_call(program: Sequence[SlotOp],
     With ``batched=True`` every input is ``(N, n)`` — N program instances
     — and the call runs over an ``(N, n // block)`` grid: one compile and
     ONE dispatch for the whole batch. Outputs come back ``(N, n)``.
+
+    With a :class:`KernelCache` the call goes through a jitted compiled
+    executable cached on the program's structure and shapes — repeated
+    calls with the same structure (any data) skip tracing and compilation
+    entirely. Two calls only differ in dispatch cost; values are
+    identical either way.
     """
     program = tuple(program)
     for op, *_ in program:
@@ -138,36 +234,18 @@ def fused_elementwise_call(program: Sequence[SlotOp],
         raise ValueError("input length mismatch in fused program")
     bl = pick_block(n, block, align=8)
     assert n % bl == 0, (n, bl)
-    grid = n // bl
 
-    kernel = functools.partial(
-        _fused_kernel, program=program,
-        in_slots=tuple(s for s, _ in inputs),
-        out_slots=tuple(out_slots), n_slots=n_slots)
+    in_slots = tuple(s for s, _ in inputs)
+    out_slots = tuple(out_slots)
     interp = INTERPRET if interpret is None else interpret
-    if batched:
-        outs = pl.pallas_call(
-            kernel,
-            grid=(N, grid),
-            in_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
-                      for _ in arrs],
-            out_specs=[pl.BlockSpec((1, 1, bl), lambda b, i: (b, i, 0))
-                       for _ in out_slots],
-            out_shape=[jax.ShapeDtypeStruct((N, grid, bl), dt)
-                       for _ in out_slots],
-            interpret=interp,
-        )(*[x.reshape(N, grid, bl) for x in arrs])
-        return [o.reshape(N, n) for o in outs]
-    outs = pl.pallas_call(
-        kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0)) for _ in arrs],
-        out_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))
-                   for _ in out_slots],
-        out_shape=[jax.ShapeDtypeStruct((grid, bl), dt) for _ in out_slots],
-        interpret=interp,
-    )(*[x.reshape(grid, bl) for x in arrs])
-    return [o.reshape(n) for o in outs]
+    if cache is None:
+        return _make_fused_caller(program, in_slots, out_slots, n_slots,
+                                  N, n, bl, dt, interp)(*arrs)
+    key = ("fused", program, in_slots, out_slots, n_slots, N, n, bl,
+           str(dt), interp)
+    fn = cache.get(key, lambda: jax.jit(_make_fused_caller(
+        program, in_slots, out_slots, n_slots, N, n, bl, dt, interp)))
+    return list(fn(*arrs))
 
 
 # ---------------------------------------------------------------------------
@@ -191,18 +269,29 @@ class PallasBackend(BackendBase):
     programs optimized by the default pipeline arrive with a
     :class:`FusionPlan` under the same bounds, which is executed as-is.
     ``fused_calls`` counts issued ``pallas_call``s — a batch of N
-    homogeneous instances issues the same number as a single instance."""
+    homogeneous instances issues the same number as a single instance.
+
+    Every dispatch goes through an instance-scoped :class:`KernelCache`
+    (pass ``kernel_cache=`` to share one across backends): compiled
+    executables are keyed on slot-program structure + batch shape +
+    dtype, so repeated ``run_workload`` calls over the same program
+    structures — serving traffic, warm-up iterations, repeated DSE
+    measurement classes — recompile nothing. Per-call hit/miss deltas
+    land in the result's ``meta['compile_cache']``."""
 
     def __init__(self, interpret: Optional[bool] = None, block: int = 1024,
                  max_fused_ops: int = MAX_FUSED_OPS,
                  max_fused_inputs: int = MAX_FUSED_INPUTS,
-                 passes=None, verify: bool = False):
+                 passes=None, verify: bool = False,
+                 kernel_cache: Optional[KernelCache] = None):
         self.interpret = INTERPRET if interpret is None else interpret
         self.block = block
         self.max_fused_ops = max_fused_ops
         self.max_fused_inputs = max_fused_inputs
         self.passes = passes
         self.verify = verify
+        self.kernel_cache = kernel_cache if kernel_cache is not None \
+            else KernelCache()
         self.fused_calls = 0             # observability: pallas_call count
         self.reduce_calls = 0           # vmapped reduction kernel launches
 
@@ -238,39 +327,52 @@ class PallasBackend(BackendBase):
         outs = fused_elementwise_call(
             region.ops, inputs, [slot for _, slot in region.outputs],
             n_slots=region.n_slots, block=self.block,
-            interpret=self.interpret, batched=True)
+            interpret=self.interpret, batched=True,
+            cache=self.kernel_cache)
         self.fused_calls += 1
         for (key, _slot), v in zip(region.outputs, outs):
             self._set(regfile, key, v)
 
     # -- scalar reductions -------------------------------------------------
+    def _make_reducer(self, op: KviOp, scalar: int,
+                      interp: bool) -> Callable:
+        """A jit-cacheable vmapped reduction over the batch dimension
+        (scalar immediates are baked in — they are part of the cache
+        key)."""
+        from repro.kernels import kdotp as _kd
+        if op is KviOp.KVRED:
+            return jax.vmap(lambda x: _kd.kvred(x, interpret=interp))
+        if op is KviOp.KDOTP:
+            return jax.vmap(lambda x, y: _kd.kdotp(x, y, interpret=interp))
+        if op is KviOp.KDOTPPS:
+            return jax.vmap(lambda x, y: _kd.kdotpps(x, y, scalar,
+                                                     interpret=interp))
+        if op is KviOp.KSVADDRF:
+            return jax.vmap(lambda x: _kd.kvred(x, interpret=interp)
+                            + jnp.asarray(scalar, jnp.int32))
+        if op is KviOp.KSVMULRF:
+            # sum(a * s) == s * sum(a)  (mod 2^32 wrap arithmetic)
+            return jax.vmap(lambda x: _kd.kvred(x, interpret=interp)
+                            * jnp.asarray(scalar, jnp.int32))
+        raise ValueError(op)             # pragma: no cover
+
     def _reduce(self, i: KviInstr, regfile):
         """One vmapped reduction kernel over the whole batch: the batch
         dimension becomes a vmap axis over the Pallas kdotp/kvred kernels
-        (one launch for N instances)."""
-        from repro.kernels import kdotp as _kd
+        (one launch for N instances, compiled once per structure via the
+        kernel cache)."""
         a = self._slice(regfile, (i.src1.id, i.src1.offset, i.length))
         interp = self.interpret
-        if i.op is KviOp.KVRED:
-            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a)
-        elif i.op is KviOp.KDOTP:
+        key = ("red", i.op.value, i.scalar, a.shape[0], i.length,
+               str(a.dtype), interp)
+        fn = self.kernel_cache.get(
+            key, lambda: jax.jit(self._make_reducer(i.op, i.scalar,
+                                                    interp)))
+        if i.op in (KviOp.KDOTP, KviOp.KDOTPPS):
             b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
-            r = jax.vmap(lambda x, y: _kd.kdotp(x, y, interpret=interp)
-                         )(a, b)
-        elif i.op is KviOp.KDOTPPS:
-            b = self._slice(regfile, (i.src2.id, i.src2.offset, i.length))
-            sh = i.scalar
-            r = jax.vmap(lambda x, y: _kd.kdotpps(x, y, sh,
-                                                  interpret=interp))(a, b)
-        elif i.op is KviOp.KSVADDRF:
-            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a) \
-                + jnp.asarray(i.scalar, jnp.int32)
-        elif i.op is KviOp.KSVMULRF:
-            # sum(a * s) == s * sum(a)  (mod 2^32 wrap arithmetic)
-            r = jax.vmap(lambda x: _kd.kvred(x, interpret=interp))(a) \
-                * jnp.asarray(i.scalar, jnp.int32)
-        else:                            # pragma: no cover
-            raise ValueError(i.op)
+            r = fn(a, b)
+        else:
+            r = fn(a)
         self.reduce_calls += 1
         self._set(regfile, (i.dst.id, i.dst.offset, 1),
                   jnp.reshape(r, (r.shape[0], 1)))
@@ -335,14 +437,16 @@ class PallasBackend(BackendBase):
         whole group). Hart assignments carry no timing meaning here — on
         TPU the batch grid IS the hart-level parallelism.
 
-        ``meta`` reports the run's observability triple: structural
-        ``groups``, issued ``pallas_calls`` and ``wall_s`` — the real
-        execution walltime (outputs are materialized to numpy inside the
-        walk, so the clock covers compile + dispatch + compute, not an
-        async handle). The DSE walltime axis reads these directly."""
+        ``meta`` reports the run's observability: structural ``groups``,
+        issued ``pallas_calls``, this call's kernel-cache hit/miss deltas
+        (``compile_cache``) and ``wall_s`` — the real execution walltime
+        (outputs are materialized to numpy inside the walk, so the clock
+        covers compile + dispatch + compute, not an async handle). The
+        DSE walltime axis and the serving engine read these directly."""
         t0 = time.perf_counter()
         workload = self.optimize_workload(workload, verify=verify)
         calls_before = self.fused_calls + self.reduce_calls
+        cc_before = (self.kernel_cache.hits, self.kernel_cache.misses)
         groups: Dict[tuple, List[int]] = {}
         for idx, e in enumerate(workload.entries):
             groups.setdefault(structural_signature(e.program),
@@ -357,8 +461,11 @@ class PallasBackend(BackendBase):
         results = tuple(BackendResult(self.name, out)
                         for out in entry_outputs)
         calls = self.fused_calls + self.reduce_calls - calls_before
-        return WorkloadResult(self.name, workload, results,
-                              meta={"groups": len(groups),
-                                    "pallas_calls": calls,
-                                    "wall_s": round(
-                                        time.perf_counter() - t0, 6)})
+        return WorkloadResult(
+            self.name, workload, results,
+            meta={"groups": len(groups),
+                  "pallas_calls": calls,
+                  "compile_cache": {
+                      "hits": self.kernel_cache.hits - cc_before[0],
+                      "misses": self.kernel_cache.misses - cc_before[1]},
+                  "wall_s": round(time.perf_counter() - t0, 6)})

@@ -22,6 +22,8 @@ true inter-hart contention per scheme — comes from running it through
     # or, to inspect the packing first:
     #   workload = sched.dispatch()               # drains the queue
     #   result = backend.run_workload(workload)
+    # or, request-driven (the serving engine's protocol):
+    #   ticket = sched.admit(program, now=arrival_cycle)
 """
 from __future__ import annotations
 
@@ -32,6 +34,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.configs.base import KlessydraConfig
 from repro.kvi.ir import KviProgram
+from repro.kvi.lowering import TraceCache, lower
 from repro.kvi.workload import (HartAssignment, KviWorkload, WorkloadEntry,
                                 WorkloadResult, structural_signature)
 
@@ -40,14 +43,37 @@ from repro.kvi.workload import (HartAssignment, KviWorkload, WorkloadEntry,
 _EST_CFG = KlessydraConfig("sched_est", M=3, F=1, D=4, spm_kbytes=64)
 
 
+def simulated_profile(program: KviProgram,
+                      cfg: Optional[KlessydraConfig] = None,
+                      trace_cache: Optional[TraceCache] = None,
+                      ) -> Dict[str, int]:
+    """Solo cycle profile of one program on one hart (no contention):
+    ``{"cycles", "busy", "stall", "idle"}`` — the per-request cost the
+    scheduler packs with and the serving engine attributes to harts.
+
+    The lower is timing-only (no ``mem_init`` copies — simulation never
+    reads buffer contents), and a :class:`TraceCache` shares the SPM
+    allocation with every other estimator/profiler call on the same
+    program object, so admission never repeats the linear scan per
+    request wave."""
+    from repro.core.simulator import simulate
+    cfg = cfg or _EST_CFG
+    if trace_cache is not None:
+        trace = trace_cache.lower(program, cfg, functional=False)
+    else:
+        trace = lower(program, cfg, functional=False)
+    sim = simulate(cfg, [trace.items])
+    h = sim.per_hart[0]
+    return {"cycles": sim.cycles, "busy": h.busy_cycles,
+            "stall": h.stall_cycles, "idle": h.idle_cycles}
+
+
 def simulated_cycles(program: KviProgram,
-                     cfg: Optional[KlessydraConfig] = None) -> int:
+                     cfg: Optional[KlessydraConfig] = None,
+                     trace_cache: Optional[TraceCache] = None) -> int:
     """Solo cycle count of one program on one hart (no contention) — the
     scheduler's latency estimate."""
-    from repro.core.simulator import simulate
-    from repro.kvi.lowering import lower
-    cfg = cfg or _EST_CFG
-    return simulate(cfg, [lower(program, cfg).items]).cycles
+    return simulated_profile(program, cfg, trace_cache)["cycles"]
 
 
 @dataclass
@@ -60,20 +86,42 @@ class Ticket:
     hart: Optional[int] = None           # assigned at dispatch
     start_est: int = 0                   # estimated admission cycle
 
+    @property
+    def finish_est(self) -> int:
+        """Estimated completion cycle (admission + solo latency)."""
+        return self.start_est + self.est_cycles
+
 
 class HartScheduler:
-    """Earliest-finish-first packer over ``n_harts`` hart streams."""
+    """Earliest-finish-first packer over ``n_harts`` hart streams.
+
+    Two admission protocols share the estimator and the ticket log:
+
+      * batch drain — ``submit()`` programs, then ``dispatch()`` packs
+        the whole queue onto harts at once (the original protocol).
+      * continuous  — ``admit(program, now)`` places one program
+        immediately on the hart that frees earliest, keeping persistent
+        per-hart clocks (``hart_free``) across calls. This is the
+        serving engine's path: requests stream in over virtual time and
+        each lands on a hart the moment it is admitted.
+    """
 
     def __init__(self, n_harts: int = 3,
                  estimator: Optional[Callable[[KviProgram], int]] = None,
-                 est_config: Optional[KlessydraConfig] = None):
+                 est_config: Optional[KlessydraConfig] = None,
+                 trace_cache: Optional[TraceCache] = None):
         self.n_harts = n_harts
         self._estimator = estimator
         self._est_cfg = est_config or _EST_CFG
+        self.trace_cache = trace_cache
         self._est_cache: Dict[tuple, int] = {}   # structure -> cycles
         self._tids = itertools.count()
         self.queue: List[Ticket] = []
         self.dispatched: List[Ticket] = []
+        # persistent per-hart busy-until clocks for admit(); dispatch()
+        # keeps its own fresh heap (batch packing starts from an empty
+        # machine, matching the original semantics)
+        self.hart_free: List[int] = [0] * n_harts
 
     # ------------------------------------------------------------------
     def estimate(self, program: KviProgram) -> int:
@@ -82,13 +130,31 @@ class HartScheduler:
             return int(self._estimator(program))
         key = structural_signature(program)
         if key not in self._est_cache:
-            self._est_cache[key] = simulated_cycles(program, self._est_cfg)
+            self._est_cache[key] = simulated_cycles(
+                program, self._est_cfg, trace_cache=self.trace_cache)
         return self._est_cache[key]
 
     def submit(self, program: KviProgram) -> Ticket:
         """Queue one program; returns its ticket."""
         t = Ticket(next(self._tids), program, self.estimate(program))
         self.queue.append(t)
+        return t
+
+    def admit(self, program: KviProgram, now: int = 0,
+              est: Optional[int] = None) -> Ticket:
+        """Continuous admission: place ``program`` immediately on the
+        hart that frees earliest, starting no earlier than ``now`` (the
+        arrival / engine-step cycle). ``est`` overrides the estimator
+        (callers that profiled the structure once pass it to skip the
+        per-request signature lookup). Ties break on the lowest hart
+        index — deterministic for a fixed submission order."""
+        est = self.estimate(program) if est is None else int(est)
+        h = min(range(self.n_harts),
+                key=lambda i: (self.hart_free[i], i))
+        start = max(int(now), self.hart_free[h])
+        t = Ticket(next(self._tids), program, est, hart=h, start_est=start)
+        self.hart_free[h] = start + est
+        self.dispatched.append(t)
         return t
 
     # ------------------------------------------------------------------

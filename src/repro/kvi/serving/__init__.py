@@ -1,0 +1,42 @@
+"""Request-driven serving for KVI programs: load generation, continuous
+hart admission, signature batching and warm compiled-kernel reuse.
+
+Quick start::
+
+    from repro.kvi.serving import (ServeEngine, make_templates,
+                                   poisson_arrivals, SMOKE_MIX)
+    templates = make_templates(SMOKE_MIX, smoke=True, seed=0)
+    specs = poisson_arrivals(templates, n_requests=64,
+                             mean_interarrival_cycles=40.0, seed=0)
+    engine = ServeEngine(templates, n_harts=3, backend=None)
+    report = engine.run(specs)          # schedule-only (no jax needed)
+
+Attach a ``PallasBackend`` to execute the batched programs for real and
+measure wall throughput plus compile-cache behaviour; run
+``python -m repro.kvi.serving --smoke`` for the CLI.
+"""
+from repro.kvi.serving.engine import (SERVE_VOLATILE, ServedRequest,
+                                      ServeEngine, StepRecord,
+                                      bucket_sizes, canonical_report)
+from repro.kvi.serving.load import (DEFAULT_MIX, SMOKE_MIX, KernelTemplate,
+                                    RequestSpec, load_trace, make_templates,
+                                    poisson_arrivals, save_trace,
+                                    template_key)
+
+__all__ = [
+    "DEFAULT_MIX",
+    "SMOKE_MIX",
+    "SERVE_VOLATILE",
+    "KernelTemplate",
+    "RequestSpec",
+    "ServeEngine",
+    "ServedRequest",
+    "StepRecord",
+    "bucket_sizes",
+    "canonical_report",
+    "load_trace",
+    "make_templates",
+    "poisson_arrivals",
+    "save_trace",
+    "template_key",
+]

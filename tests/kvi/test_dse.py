@@ -671,14 +671,23 @@ class TestPallasWalltime:
             k = rec.kernels["saxpy"]
             assert k["pallas_calls"] > 0
             assert k["pallas_walltime_s"] >= 0
+            # the warm-up split: compile is one-time, steady is the
+            # warm per-batch cost a serving loop pays
+            assert k["pallas_compile_s"] >= 0
+            assert k["pallas_steady_s"] >= 0
         assert "pallas_calls" not in res.records[2].kernels["saxpy"]
         # scheme/D don't change pallas execution: both measured points
         # are one measurement class sharing one set of numbers
-        assert res.meta["pallas"] == {"n_measured_points": 2,
-                                      "n_measurement_classes": 1}
+        assert res.meta["pallas"]["n_measured_points"] == 2
+        assert res.meta["pallas"]["n_measurement_classes"] == 1
+        cc = res.meta["pallas"]["compile_cache"]
+        # the warm iteration replays the cold iteration's compiled
+        # kernels: every cache entry compiled once, hit at least once
+        assert cc["misses"] > 0 and cc["hits"] >= cc["misses"]
         a, b = (r.kernels["saxpy"] for r in res.records[:2])
         assert a["pallas_calls"] == b["pallas_calls"]
         assert a["pallas_walltime_s"] == b["pallas_walltime_s"]
+        assert a["pallas_steady_s"] == b["pallas_steady_s"]
         # CSV grows the walltime columns, blank for unmeasured points
         rows = res.csv_rows()
         assert rows[0]["pallas_calls"] > 0
@@ -693,9 +702,12 @@ class TestPallasWalltime:
         assert len(pal) == 1
         assert pal[0]["precision_bits"] == 32
         assert pal[0]["pallas_calls"] > 0
+        assert pal[0]["pallas_compile_s"] >= 0
+        assert pal[0]["pallas_steady_s"] >= 0
         from repro.kvi.dse import render_markdown
         md = render_markdown(report)
         assert "Pallas walltime" in md and "pallas_calls" in md
+        assert "compile (s)" in md and "steady (s)" in md
 
     def test_unmeasured_sweep_has_no_pallas_columns(self, tiny_sweep):
         assert not tiny_sweep.measured_pallas
