@@ -7,31 +7,81 @@ composite workload) and emits ``BENCH_kvi_dse.json`` — per-point cycles
 the acceptance checks (sym-MIMD fastest, shared cheapest, het-MIMD on
 the front between them; 8-bit >= 2x on the MFU-bound kernels).
 
-``--executor`` selects the sweep executor, ``--measure-pallas`` adds
-the real-walltime axis, and ``--check`` additionally regresses the
-cost model's CALIBRATION constants against the paper's Table 3
-energies (``repro.kvi.dse.cost.calibration_fit``), failing when the
-relative fit error exceeds the documented threshold.
+``--executor`` selects the sweep executor (default ``auto``),
+``--measure-pallas`` adds the real-walltime axis, and ``--check``
+additionally regresses the cost model's CALIBRATION constants against
+the paper's Table 3 energies (``repro.kvi.dse.cost.calibration_fit``),
+failing when the relative fit error exceeds the documented threshold.
+
+The benchmark also times the **incremental** path: the sweep runs
+twice against one persistent point cache (a throwaway temp directory
+unless ``--cache-dir`` pins one) — cold, then warm — and the report
+gains a ``cache`` block with hit/miss/invalidation counters and the
+measured ``warm_speedup``. The warm re-sweep must be byte-identical to
+the cold one and, on the smoke space, at least 10x faster with 100%
+point-cache hits.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_kvi_dse [--smoke]
           [--seed N] [--out PATH] [--executor NAME] [--measure-pallas]
-          [--check]
+          [--cache-dir DIR] [--check]
 or through the harness:  python -m benchmarks.run --only kvi_dse
 """
 from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
+import tempfile
+import time
+
+#: the warm re-sweep floor the smoke acceptance gate pins: resolving
+#: every point from the store must beat recomputing the space by at
+#: least this factor (measured ~50x on the 36-point smoke space; 10x
+#: leaves headroom for slow CI runners)
+WARM_SPEEDUP_MIN = 10.0
 
 
 def run(emit, smoke: bool = False, seed: int = 0,
-        executor: str = None, measure_pallas: bool = False) -> dict:
+        executor: str = "auto", measure_pallas: bool = False,
+        cache_dir: str = None) -> dict:
     from repro.kvi.dse.cost import calibration_fit
+    from repro.kvi.dse.pointcache import PointCache
     from repro.kvi.dse.report import run_dse
-    result, report = run_dse(smoke=smoke, seed=seed, emit=emit,
-                             executor=executor,
-                             measure_pallas=measure_pallas)
+    tmp = None
+    if cache_dir is None:
+        tmp = cache_dir = tempfile.mkdtemp(prefix="bench_dse_cache_")
+    try:
+        t0 = time.perf_counter()
+        cold_cache = PointCache(cache_dir=cache_dir)
+        result, report = run_dse(smoke=smoke, seed=seed, emit=emit,
+                                 executor=executor,
+                                 measure_pallas=measure_pallas,
+                                 cache=cold_cache)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm_cache = PointCache(cache_dir=cache_dir)
+        warm_result, _ = run_dse(smoke=smoke, seed=seed,
+                                 emit=lambda s: None,
+                                 executor=executor,
+                                 measure_pallas=measure_pallas,
+                                 cache=warm_cache)
+        warm_s = time.perf_counter() - t0
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+    stats = warm_cache.stats
+    report["cache"] = {
+        "cold_s": round(cold_s, 3), "warm_s": round(warm_s, 3),
+        "warm_speedup": round(cold_s / max(warm_s, 1e-9), 1),
+        "hits": stats["hits"], "misses": stats["misses"],
+        "invalidations": stats["invalidations"],
+        "pallas_hits": stats["pallas_hits"],
+        "pallas_misses": stats["pallas_misses"],
+        "cold_misses": cold_cache.stats["misses"],
+        "warm_identical":
+            result.canonical_json() == warm_result.canonical_json(),
+    }
     report["calibration_fit"] = calibration_fit()
     emit("# --- checks ---")
     for k, v in report["checks"].items():
@@ -39,6 +89,11 @@ def run(emit, smoke: bool = False, seed: int = 0,
     fit = report["calibration_fit"]
     emit(f"calibration_fit: max_rel_err={fit['max_rel_err']} "
          f"(threshold {fit['threshold']}) ok={fit['ok']}")
+    c = report["cache"]
+    emit(f"point cache: cold {c['cold_s']}s ({c['cold_misses']} "
+         f"misses) -> warm {c['warm_s']}s ({c['hits']} hits, "
+         f"{c['misses']} misses) = {c['warm_speedup']}x, "
+         f"byte-identical={c['warm_identical']}")
     for kern, data in report["kernels"].items():
         emit(f"{kern}: front={len(data['front'])} points, "
              f"subword_max={data['subword']['max_speedup']}x")
@@ -54,11 +109,16 @@ def main(argv=None) -> int:
                     help="small kernels + default axes (CI fast job)")
     ap.add_argument("--seed", type=int, default=0,
                     help="kernel input data seed (reproducible inputs)")
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process"),
-                    help="sweep executor (default: threads)")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "serial", "thread", "process"),
+                    help="sweep executor (default auto: serial for "
+                         "small uncached fan-outs, process otherwise)")
     ap.add_argument("--measure-pallas", action="store_true",
                     help="add the Pallas walltime axis per point")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent point-cache directory for the "
+                         "cold/warm timing (default: a throwaway temp "
+                         "dir, removed after the run)")
     ap.add_argument("--check", action="store_true",
                     help="also fail when the CALIBRATION constants no "
                          "longer fit the paper's Table 3 energies")
@@ -85,11 +145,24 @@ def main(argv=None) -> int:
         return 0
     result = run(emit=print, smoke=args.smoke, seed=args.seed,
                  executor=args.executor,
-                 measure_pallas=args.measure_pallas)
+                 measure_pallas=args.measure_pallas,
+                 cache_dir=args.cache_dir)
     checks = result["checks"]
     assert checks["all_schemes_covered"], "a scheme produced no points"
     assert checks["pareto_ordering_ok"], "paper scheme ordering broken"
     assert checks["subword_2x_on_mfu_bound"], "sub-word speedup < 2x"
+    cache = result["cache"]
+    assert cache["warm_identical"], \
+        "warm re-sweep canonical JSON diverged from the cold sweep"
+    assert cache["misses"] == 0 and cache["hits"] > 0, \
+        f"warm re-sweep was not fully cached: {cache}"
+    if args.smoke:
+        # the paper-scale space is dominated by sweep compute too, but
+        # only the smoke space is small/stable enough to pin a ratio on
+        # shared CI runners
+        assert cache["warm_speedup"] >= WARM_SPEEDUP_MIN, \
+            (f"warm re-sweep speedup {cache['warm_speedup']}x below the "
+             f"{WARM_SPEEDUP_MIN}x floor")
     if args.check:
         fit = result["calibration_fit"]
         if not fit["ok"]:                # explicit: survives python -O

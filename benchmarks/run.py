@@ -9,7 +9,10 @@ per benchmark; derived = that benchmark's headline check).
 
 ``--seed`` is forwarded to every benchmark whose ``run()`` accepts a
 ``seed`` keyword, so the randomized inputs behind the BENCH_*.json
-artifacts are reproducible run-to-run.
+artifacts are reproducible run-to-run. Giving ``--seed`` while
+selecting a benchmark that does *not* accept one is an error naming
+that benchmark — the flag is never silently dropped — and the check
+runs for every selected benchmark up front, before any of them start.
 """
 from __future__ import annotations
 
@@ -19,14 +22,37 @@ import sys
 import time
 
 
+def bench_kwargs(name: str, mod, seed) -> dict:
+    """Keyword arguments to forward to ``mod.run`` for bench ``name``.
+
+    ``seed is None`` (flag not given) forwards nothing — seed-aware
+    benches fall back to their own reproducible default. An explicit
+    seed is forwarded only to a ``run()`` that declares the keyword;
+    otherwise raise, naming the bench, so a typo'd ``--only`` +
+    ``--seed`` combination fails loudly instead of silently measuring
+    unseeded inputs."""
+    if seed is None:
+        return {}
+    params = inspect.signature(mod.run).parameters
+    if "seed" not in params:
+        raise SystemExit(
+            f"benchmarks.run: --seed {seed} given, but benchmark "
+            f"{name!r} ({mod.__name__}.run) does not accept a 'seed' "
+            f"keyword — it would be silently dropped. Re-run without "
+            f"--seed, or restrict --only to seed-aware benchmarks.")
+    return {"seed": seed}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
                          "roofline,kvi_batch,kvi_passes,kvi_dse,"
                          "kvi_serve")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="input-data seed for seed-aware benchmarks")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="input-data seed, forwarded to seed-aware "
+                         "benchmarks (error if a selected benchmark "
+                         "cannot accept it)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_kvi_batch, bench_kvi_dse, bench_kvi_passes,
@@ -69,17 +95,24 @@ def main(argv=None) -> int:
                       f"{r['checks']['deterministic']}"),
     }
     only = [s for s in args.only.split(",") if s]
+    unknown = [s for s in only if s not in benches]
+    if unknown:
+        raise SystemExit(f"benchmarks.run: unknown benchmark(s) "
+                         f"{unknown} in --only; available: "
+                         f"{', '.join(benches)}")
+    selected = [(name, mod, derive)
+                for name, (mod, derive) in benches.items()
+                if not only or name in only]
+    # validate the seed forwarding for EVERY selected bench before any
+    # of them run — a late failure would waste the finished ones
+    all_kwargs = {name: bench_kwargs(name, mod, args.seed)
+                  for name, mod, _ in selected}
     rows = []
-    for name, (mod, derive) in benches.items():
-        if only and name not in only:
-            continue
+    for name, mod, derive in selected:
         print(f"\n================ {name} ================", flush=True)
         t0 = time.perf_counter()
         try:
-            kwargs = {}
-            if "seed" in inspect.signature(mod.run).parameters:
-                kwargs["seed"] = args.seed
-            result = mod.run(emit=print, **kwargs)
+            result = mod.run(emit=print, **all_kwargs[name])
             derived = derive(result)
         except Exception as e:  # noqa: BLE001 — report but keep harness alive
             derived = f"ERROR:{type(e).__name__}:{e}"

@@ -32,6 +32,17 @@ from repro.kvi.lowering import TraceCache, lower
 from repro.kvi.workload import (KviWorkload, WorkloadResult,
                                 dedup_entry_outputs)
 
+#: Version token of the cycle-accurate timing semantics (lowering cost
+#: annotations + :func:`repro.core.simulator.simulate` event model),
+#: part of every persistent sweep cache key
+#: (:mod:`repro.kvi.dse.pointcache`). Bump it whenever a change alters
+#: simulated cycles, utilization or busy/stall accounting for an
+#: unchanged program — cached sweep records keyed to the old token then
+#: miss instead of serving stale timings. Explicit by design (not a
+#: source hash): refactors that provably preserve timing keep caches
+#: warm.
+TIMING_VERSION = 1
+
 
 def default_schemes(D: int = 4, spm_kbytes: int = 64,
                     ) -> Dict[str, KlessydraConfig]:

@@ -23,10 +23,14 @@ CLI::
 from repro.kvi.dse.cost import (CALIBRATION, CALIBRATION_FIT_MAX_REL_ERR,
                                 HardwareCost, calibration_fit,
                                 energy_model, hardware_cost)
-from repro.kvi.dse.executors import (EXECUTORS, PointJob, ProcessExecutor,
-                                     SerialExecutor, SweepExecutor,
-                                     ThreadExecutor, make_executor)
+from repro.kvi.dse.executors import (AUTO_SERIAL_MAX, EXECUTORS, PointJob,
+                                     ProcessExecutor, SerialExecutor,
+                                     SweepExecutor, ThreadExecutor,
+                                     make_executor, resolve_auto)
 from repro.kvi.dse.pareto import dominates, front_metrics, pareto_front
+from repro.kvi.dse.pointcache import (PointCache, default_cache_dir,
+                                      pallas_class_key, point_key,
+                                      program_fingerprint)
 from repro.kvi.dse.report import (build_report, full_space, render_markdown,
                                   run_dse, smoke_space)
 from repro.kvi.dse.space import (SCHEMES, DesignPoint, DesignSpace,
@@ -38,8 +42,10 @@ from repro.kvi.dse.sweep import (PointRecord, SweepResult,
 __all__ = [
     "CALIBRATION", "CALIBRATION_FIT_MAX_REL_ERR", "HardwareCost",
     "calibration_fit", "energy_model", "hardware_cost",
-    "EXECUTORS", "PointJob", "ProcessExecutor", "SerialExecutor",
-    "SweepExecutor", "ThreadExecutor", "make_executor",
+    "AUTO_SERIAL_MAX", "EXECUTORS", "PointJob", "ProcessExecutor",
+    "SerialExecutor", "SweepExecutor", "ThreadExecutor", "make_executor",
+    "resolve_auto", "PointCache", "default_cache_dir", "pallas_class_key",
+    "point_key", "program_fingerprint",
     "dominates", "front_metrics", "pareto_front", "build_report",
     "full_space", "render_markdown", "run_dse", "smoke_space", "SCHEMES",
     "DesignPoint", "DesignSpace", "preflight_point", "scheme_config",

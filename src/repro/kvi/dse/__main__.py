@@ -2,19 +2,28 @@
 
 Runs the design-space sweep over the paper's kernels, writes the
 artifacts (``dse_sweep.json``, ``dse_sweep.csv``, ``dse_report.md``,
-``BENCH_kvi_dse.json``) and exits non-zero when any acceptance check
-fails (all schemes covered, Pareto scheme ordering, sub-word >= 2x on
-the MFU-bound kernels).
+``BENCH_kvi_dse.json``, ``dse_cache_stats.json``) and exits non-zero
+when any acceptance check fails (all schemes covered, Pareto scheme
+ordering, sub-word >= 2x on the MFU-bound kernels).
 
-``--executor {serial,thread,process}`` selects the sweep executor
-(process = real multi-core speedup past the GIL; all three produce
-identical canonical results). ``--measure-pallas`` adds the walltime
-axis: each point's programs also run through ``PallasBackend`` and the
-artifacts gain walltime + compiled-``pallas_call``-count columns.
+``--executor {auto,serial,thread,process}`` selects the sweep executor
+(default ``auto``: serial for small uncached fan-outs, the spawn
+process pool otherwise; all executors produce identical canonical
+results). ``--measure-pallas`` adds the walltime axis: each point's
+programs also run through ``PallasBackend`` and the artifacts gain
+walltime + compiled-``pallas_call``-count columns.
+
+Sweeps are **incremental** by default: measured points persist in a
+content-addressed cache (``~/.cache/klessydra-dse`` or ``--cache-dir``)
+and a re-run with unchanged inputs resolves every point — and every
+``--measure-pallas`` compile — from the store. ``--no-cache`` restores
+the cold-sweep behavior; ``--cache-stats`` prints the store's counters
+and shape after the run.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -32,27 +41,45 @@ def main(argv=None) -> int:
                     help="kernel input data seed (reproducible BENCH)")
     ap.add_argument("--jobs", type=int, default=4,
                     help="sweep worker count (threads or processes)")
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process"),
-                    help="sweep executor (default: thread when --jobs "
-                         "> 1, else serial)")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "serial", "thread", "process"),
+                    help="sweep executor (default auto: serial for <8 "
+                         "uncached points, process pool otherwise)")
     ap.add_argument("--measure-pallas", action="store_true",
                     help="also measure real Pallas walltime + "
                          "pallas_call counts per point (one execution "
-                         "per precision/pipeline class)")
+                         "per precision/pipeline class; cached across "
+                         "runs like any other measurement)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent point-cache directory (default: "
+                         "$XDG_CACHE_HOME/klessydra-dse or "
+                         "~/.cache/klessydra-dse)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent point cache: compute "
+                         "every point cold and store nothing")
+    ap.add_argument("--cache-stats", action="store_true",
+                    help="print point-cache counters and store shape "
+                         "after the sweep")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-point progress lines")
     args = ap.parse_args(argv)
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
+    if args.no_cache and args.cache_dir:
+        ap.error("--no-cache and --cache-dir are mutually exclusive")
 
     from repro.kvi.dse.report import run_dse
+    cache = None
+    if not args.no_cache:
+        from repro.kvi.dse.pointcache import PointCache
+        cache = PointCache(cache_dir=args.cache_dir)
     emit = (lambda s: None) if args.quiet else print
     result, report = run_dse(smoke=args.smoke, seed=args.seed,
                              emit=emit, out_dir=args.out_dir,
                              max_workers=args.jobs,
                              executor=args.executor,
-                             measure_pallas=args.measure_pallas)
+                             measure_pallas=args.measure_pallas,
+                             cache=cache)
 
     meta = report["meta"]
     print(f"\n# swept {meta['n_points']} points "
@@ -60,6 +87,14 @@ def main(argv=None) -> int:
           f"[executor={meta['executor']}, lowering cache "
           f"{meta['lowering']['hits']} hits / "
           f"{meta['lowering']['misses']} misses]")
+    if cache is not None:
+        pc = meta["point_cache"]
+        print(f"# point cache: {pc['hits']} hits / {pc['misses']} "
+              f"misses / {pc['invalidations']} invalidations "
+              f"(pallas: {pc['pallas_hits']} hits / "
+              f"{pc['pallas_misses']} misses)")
+        if args.cache_stats:
+            print(f"# cache stats: {json.dumps(pc, sort_keys=True)}")
     if "pallas" in meta:
         print(f"# pallas walltime: {meta['pallas']['n_measured_points']} "
               f"points in {meta['pallas']['n_measurement_classes']} "

@@ -31,6 +31,15 @@ import numpy as np
 
 from repro.configs.base import MFU_UNITS, KlessydraConfig
 
+#: Version token of the cost model, part of every persistent sweep
+#: cache key (:mod:`repro.kvi.dse.pointcache`). Bump it whenever a
+#: :data:`CALIBRATION` constant or the area/energy formulas change in a
+#: way that alters any number a :class:`PointRecord` carries — cached
+#: records keyed to the old token then miss instead of serving stale
+#: areas/energies. Deliberately explicit (not a source hash): comment
+#: or refactor-only edits must not cold-start every user's cache.
+CALIBRATION_VERSION = 1
+
 #: The calibration table. Units: LUTs / FFs / DSP48s / BRAM36s for area
 #: entries, nanojoules for energy entries (at the paper's ~100 MHz
 #: Kintex-7 operating point).

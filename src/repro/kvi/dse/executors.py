@@ -121,12 +121,33 @@ class ProcessExecutor(SweepExecutor):
 EXECUTORS = {cls.name: cls
              for cls in (SerialExecutor, ThreadExecutor, ProcessExecutor)}
 
+#: ``"auto"`` fan-outs below this many *uncached* jobs run serially —
+#: a spawn pool's interpreter start-up costs more than it saves on a
+#: handful of points (exactly the warm-re-sweep case, where the
+#: persistent point cache resolves most jobs in the parent and the
+#: executor sees only the delta).
+AUTO_SERIAL_MAX = 8
+
+
+def resolve_auto(spec: Union[str, SweepExecutor, None],
+                 n_jobs: int) -> Union[str, SweepExecutor, None]:
+    """Resolve the ``"auto"`` executor spec against the number of jobs
+    that will actually dispatch (cache hits already excluded): serial
+    below :data:`AUTO_SERIAL_MAX`, the process pool otherwise. Every
+    other spec — an explicit name, an instance, ``None`` — passes
+    through untouched: explicit flags stay authoritative."""
+    if spec != "auto":
+        return spec
+    return "serial" if n_jobs < AUTO_SERIAL_MAX else "process"
+
 
 def make_executor(spec: Union[str, SweepExecutor, None],
                   max_workers: int = 4) -> SweepExecutor:
     """Resolve an executor: an instance passes through, a name
     instantiates from the registry, ``None`` keeps the legacy behavior
-    (threads when ``max_workers > 1``, else serial)."""
+    (threads when ``max_workers > 1``, else serial). ``"auto"`` must be
+    resolved by the caller first (:func:`resolve_auto` — it needs the
+    uncached-job count, which only the sweep driver knows)."""
     if isinstance(spec, SweepExecutor):
         return spec
     if spec is None:
@@ -135,5 +156,6 @@ def make_executor(spec: Union[str, SweepExecutor, None],
         cls = EXECUTORS[spec]
     except KeyError:
         raise ValueError(f"unknown sweep executor {spec!r}; available: "
-                         f"{sorted(EXECUTORS)}") from None
+                         f"{sorted(EXECUTORS)} (or 'auto' at the sweep "
+                         f"level)") from None
     return cls(max_workers=max_workers)

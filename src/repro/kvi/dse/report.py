@@ -432,29 +432,40 @@ def run_dse(smoke: bool = False, seed: int = 0,
             space: Optional[DesignSpace] = None,
             executor: Optional[str] = None,
             measure_pallas: bool = False,
+            cache=None,
             ) -> Tuple[SweepResult, Dict[str, object]]:
     """Sweep + report (+ artifacts). Writes ``dse_sweep.json``,
     ``dse_sweep.csv``, ``dse_report.md`` and ``BENCH_kvi_dse.json``
     into ``out_dir`` when given. ``executor`` selects the sweep
-    executor (serial/thread/process); ``measure_pallas`` adds the
-    Pallas walltime stage to every point."""
+    executor (serial/thread/process/auto); ``measure_pallas`` adds the
+    Pallas walltime stage to every point. ``cache`` attaches a
+    persistent :class:`~repro.kvi.dse.pointcache.PointCache` — the
+    sweep then recomputes only points whose inputs changed, and
+    ``dse_cache_stats.json`` lands next to the other artifacts."""
     t0 = time.perf_counter()
     space = space or (smoke_space() if smoke else full_space())
     result = sweep(space, paper_kernel_factory(smoke=smoke, seed=seed),
                    emit=emit, max_workers=max_workers,
                    executor=executor,
-                   measure_pallas=True if measure_pallas else None)
+                   measure_pallas=True if measure_pallas else None,
+                   cache=cache)
     report = build_report(result)
     report["meta"]["smoke"] = smoke
     report["meta"]["seed"] = seed
     report["meta"]["total_wall_s"] = round(time.perf_counter() - t0, 3)
     if out_dir is not None:
+        import json
         os.makedirs(out_dir, exist_ok=True)
         result.save_json(os.path.join(out_dir, "dse_sweep.json"))
         result.save_csv(os.path.join(out_dir, "dse_sweep.csv"))
         with open(os.path.join(out_dir, "dse_report.md"), "w") as f:
             f.write(render_markdown(report))
-        import json
         with open(os.path.join(out_dir, "BENCH_kvi_dse.json"), "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
+        if cache is not None:
+            stats = dict(cache.stats)
+            stats["total_wall_s"] = report["meta"]["total_wall_s"]
+            with open(os.path.join(out_dir,
+                                   "dse_cache_stats.json"), "w") as f:
+                json.dump(stats, f, indent=2, sort_keys=True)
     return result, report

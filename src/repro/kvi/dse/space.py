@@ -118,6 +118,21 @@ class DesignPoint:
             n += "_fu" + "-".join(f"{u}{c}" for u, c in self.fu_counts)
         return n
 
+    def canonical_dict(self) -> dict:
+        """JSON-native identity of the point for content-addressed
+        caching (:mod:`repro.kvi.dse.pointcache`): every field that can
+        change a measurement. ``measure_pallas`` is deliberately
+        excluded — it is a measurement *mode* (Pallas results cache
+        under their own class key), not a hardware axis — and ``name``
+        is derived, so it is excluded too."""
+        return {"scheme": self.scheme, "M": self.M, "F": self.F,
+                "D": self.D, "precision_bits": self.precision_bits,
+                "spm_kbytes": self.spm_kbytes,
+                "chaining": bool(self.chaining),
+                "fu_counts": [[u, c] for u, c in self.fu_counts],
+                "passes": list(self.passes)
+                if self.passes is not None else None}
+
     def config(self) -> KlessydraConfig:
         """The concrete machine: hardware sub-word support matches the
         point's data precision (a 32-bit point carries no sub-word

@@ -238,7 +238,11 @@ def lower(program: KviProgram, config: KlessydraConfig,
 def config_fingerprint(config: KlessydraConfig) -> tuple:
     """A stable hashable identity for one machine configuration —
     every field, so any parameter that could change lowering or timing
-    distinguishes cache entries."""
+    distinguishes cache entries. In-memory only (tuples of live
+    values); the persistent sweep cache
+    (:mod:`repro.kvi.dse.pointcache`) covers the same ground
+    content-addressably via the point's canonical dict + program
+    fingerprints."""
     return dataclasses.astuple(config)
 
 

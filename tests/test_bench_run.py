@@ -1,0 +1,54 @@
+"""Benchmark harness regression tests: ``--seed`` forwarding by
+signature inspection must fail loudly — naming the offending benchmark
+— instead of silently dropping the flag, and the check runs for every
+selected benchmark before any of them start."""
+from types import SimpleNamespace
+
+import pytest
+
+from benchmarks.run import bench_kwargs, main
+
+
+def seeded_run(emit, seed=0):
+    return {"seed": seed}
+
+
+def unseeded_run(emit):
+    return {}
+
+
+SEEDED = SimpleNamespace(run=seeded_run, __name__="benchmarks.fake_seeded")
+UNSEEDED = SimpleNamespace(run=unseeded_run,
+                           __name__="benchmarks.fake_unseeded")
+
+
+class TestBenchKwargs:
+    def test_no_seed_forwards_nothing(self):
+        assert bench_kwargs("fake", SEEDED, None) == {}
+        assert bench_kwargs("fake", UNSEEDED, None) == {}
+
+    def test_seed_forwarded_when_accepted(self):
+        assert bench_kwargs("fake", SEEDED, 42) == {"seed": 42}
+
+    def test_seed_rejected_naming_the_bench(self):
+        with pytest.raises(SystemExit, match="'table2'"):
+            bench_kwargs("table2", UNSEEDED, 42)
+
+    def test_error_names_the_module_and_flag(self):
+        with pytest.raises(SystemExit,
+                           match="--seed 7.*fake_unseeded"):
+            bench_kwargs("x", UNSEEDED, 7)
+
+
+class TestMainValidation:
+    def test_seed_with_unseeded_bench_fails_before_running(self, capsys):
+        # table2's run() takes no seed: the harness must exit up front,
+        # before ANY selected benchmark prints its banner
+        with pytest.raises(SystemExit, match="'table2'"):
+            main(["--only", "table2,kvi_dse", "--seed", "3"])
+        out = capsys.readouterr().out
+        assert "================" not in out
+
+    def test_unknown_only_name_rejected(self):
+        with pytest.raises(SystemExit, match="tabel2"):
+            main(["--only", "tabel2"])
