@@ -68,6 +68,34 @@ class HartStats:
 
 
 @dataclass
+class SimRecorder:
+    """Optional per-event capture for one :meth:`Simulator.run` call —
+    the raw material cycle-accurate timeline traces are built from
+    (:mod:`repro.kvi.obs`). Recording is opt-in: with ``recorder=None``
+    (the default everywhere) the simulator's inner loop executes the
+    exact pre-instrumentation path, so the disabled overhead is a
+    handful of ``is not None`` branches (pinned < 2% by tests).
+
+    All intervals are half-open ``[start, end)`` in simulated cycles:
+
+      instrs  — (hart, op name, engine, start, end, chained) per
+                coprocessor instruction's occupancy,
+      scalars — (hart, start, end, count) per scalar block,
+      waits   — (hart, op name, start, end) per issue stall (the hart
+                wanted to issue ``op`` at ``start`` but could not until
+                ``end`` — resource busy or slot alignment),
+      holds   — (resource key, start, end) per resource acquisition
+                (SPMI streams, LSU port, and the per-internal-unit FU
+                instances het-MIMD harts contend on).
+    """
+
+    instrs: List[tuple] = field(default_factory=list)
+    scalars: List[tuple] = field(default_factory=list)
+    waits: List[tuple] = field(default_factory=list)
+    holds: List[tuple] = field(default_factory=list)
+
+
+@dataclass
 class SimResult:
     cycles: int
     per_hart: List[HartStats]
@@ -169,8 +197,10 @@ class Simulator:
                       for k in range(cfg.F * cfg.fu_count(uname)))
         return [((("spmi", hart),), spmi_c), (units, unit_c)]
 
-    def run(self, programs: Sequence[Sequence[Item]]) -> SimResult:
+    def run(self, programs: Sequence[Sequence[Item]],
+            recorder: Optional[SimRecorder] = None) -> SimResult:
         cfg = self.cfg
+        rec = recorder
         H = cfg.harts
         assert len(programs) <= H, "more programs than harts"
         busy_until: Dict[tuple, int] = {}
@@ -223,6 +253,8 @@ class Simulator:
                 stats[h].instructions += it.count
                 for k in range(it.count):
                     activity[h].append((t + k * H, t + k * H + 1))
+                if rec is not None and it.count:
+                    rec.scalars.append((h, t, end, it.count))
                 next_slot[h] = _align_up(end, h, H)
                 finish[h] = max(finish[h], end)
             else:
@@ -237,6 +269,14 @@ class Simulator:
                     k = min(keys, key=lambda kk: busy_until.get(kk, 0))
                     busy_until[k] = t + dur
                     end = max(end, t + dur)
+                    if rec is not None:
+                        rec.holds.append((k, t, t + dur))
+                if rec is not None:
+                    if t > next_slot[h]:
+                        rec.waits.append((h, it.op, next_slot[h], t))
+                    rec.instrs.append(
+                        (h, it.op, it.engine, t, end,
+                         getattr(it, "chain_discount", 0) > 0))
                 if it.engine == "lsu":
                     stats[h].lsu_ops += 1
                     lsu_busy += end - t
@@ -266,5 +306,6 @@ class Simulator:
 
 
 def simulate(config: KlessydraConfig,
-             programs: Sequence[Sequence[Item]]) -> SimResult:
-    return Simulator(config).run(programs)
+             programs: Sequence[Sequence[Item]],
+             recorder: Optional[SimRecorder] = None) -> SimResult:
+    return Simulator(config).run(programs, recorder=recorder)

@@ -22,10 +22,11 @@ Paper invariant (validated in tests, homogeneous AND composite):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import KlessydraConfig
-from repro.core.simulator import SimResult, simulate
+from repro.core.simulator import (SimRecorder, SimResult, _merge_intervals,
+                                  simulate)
 from repro.kvi.backend import (BackendBase, BackendResult, register_backend)
 from repro.kvi.ir import KviProgram
 from repro.kvi.lowering import TraceCache, lower
@@ -42,6 +43,91 @@ from repro.kvi.workload import (KviWorkload, WorkloadResult,
 #: source hash): refactors that provably preserve timing keep caches
 #: warm.
 TIMING_VERSION = 1
+
+
+def _subtract(intervals: List[Tuple[int, int]],
+              cover: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Pieces of sorted merged half-open ``intervals`` not overlapped by
+    sorted merged ``cover`` — interval-list counterpart of the
+    simulator's ``_length_outside`` (used so the emitted stall/idle spans
+    sum to exactly the ``HartStats`` breakdown)."""
+    out: List[Tuple[int, int]] = []
+    ci = 0
+    for s, e in intervals:
+        cur = s
+        while cur < e:
+            while ci < len(cover) and cover[ci][1] <= cur:
+                ci += 1
+            if ci == len(cover) or cover[ci][0] >= e:
+                out.append((cur, e))
+                break
+            cs, ce = cover[ci]
+            if cs > cur:
+                out.append((cur, cs))
+            cur = max(cur, min(ce, e))
+    return out
+
+
+def emit_sim_trace(obs, scheme: str, rec: SimRecorder,
+                   res: SimResult) -> None:
+    """Render one scheme's :class:`SimRecorder` capture onto the obs
+    bundle: per-hart instruction/fused/scalar occupancy spans, stall
+    spans (issue waits minus the hart's own in-flight work, matching the
+    ``HartStats`` convention), explicit idle spans, FU-hold lanes for
+    contended resource instances, and cycle metrics.
+
+    Emitted invariant (pinned by the trace-integrity tests): per hart,
+    the stall spans sum to ``stall_cycles``, the idle spans sum to
+    ``idle_cycles``, and busy/stall/idle tile ``[0, cycles)``."""
+    tr = obs.tracer
+    m = obs.metrics
+    proc = f"cyclesim:{scheme}"
+    H = len(res.per_hart)
+    total = res.cycles
+    hist = m.histogram(f"cyclesim.{scheme}.instr_cycles")
+
+    # exact per-hart activity cover — scalar blocks decompose into their
+    # owned 1-cycle issue slots, mirroring the simulator's accounting
+    act: List[List[Tuple[int, int]]] = [[] for _ in range(H)]
+    for h, op, engine, s, e, chained in rec.instrs:
+        act[h].append((s, e))
+        tr.span((proc, f"hart{h}"), op, s, e - s,
+                cat="fused" if chained else "instr",
+                args={"engine": engine})
+        hist.observe(e - s)
+    for h, s, e, count in rec.scalars:
+        act[h].extend((s + k * H, s + k * H + 1) for k in range(count))
+        tr.span((proc, f"hart{h}"), f"scalar x{count}", s, e - s,
+                cat="scalar", args={"count": count})
+
+    covers = [_merge_intervals(iv) for iv in act]
+    stall_cover: List[List[Tuple[int, int]]] = [[] for _ in range(H)]
+    for h, op, s, e in rec.waits:
+        for ps, pe in _subtract([(s, e)], covers[h]):
+            tr.span((proc, f"hart{h}"), f"wait:{op}", ps, pe - ps,
+                    cat="stall")
+            stall_cover[h].append((ps, pe))
+    for h in range(H):
+        occupied = _merge_intervals(covers[h] + stall_cover[h])
+        for s, e in _subtract([(0, total)], occupied):
+            tr.span((proc, f"hart{h}"), "idle", s, e - s, cat="idle")
+
+    # FU-hold lanes: which resource instance each op pinned, and when —
+    # het-MIMD's per-internal-unit contention becomes visible here
+    for key, s, e in rec.holds:
+        lane = "fu:" + "-".join(str(p) for p in key)
+        tr.span((proc, lane), lane[3:], s, e - s, cat="hold")
+
+    st = res.per_hart
+    m.counter(f"cyclesim.{scheme}.instructions").inc(
+        sum(h.instructions for h in st))
+    m.counter(f"cyclesim.{scheme}.vector_ops").inc(
+        sum(h.vector_ops for h in st))
+    m.counter(f"cyclesim.{scheme}.lsu_ops").inc(
+        sum(h.lsu_ops for h in st))
+    m.counter(f"cyclesim.{scheme}.stall_cycles").inc(
+        sum(h.stall_cycles for h in st))
+    m.gauge(f"cyclesim.{scheme}.cycles").set(total)
 
 
 def default_schemes(D: int = 4, spm_kbytes: int = 64,
@@ -65,11 +151,15 @@ class CycleSimBackend(BackendBase):
                  replicate_harts: bool = True,
                  passes=None, chaining: bool = False,
                  trace_cache: Optional[TraceCache] = None,
-                 verify: bool = False):
+                 verify: bool = False, obs=None):
         self.schemes = schemes or default_schemes()
         self.replicate_harts = replicate_harts
         self.passes = passes
         self.verify = verify
+        # optional telemetry bundle (repro.kvi.obs.Obs): when enabled,
+        # every simulate() call records per-event timelines and emits
+        # them as per-scheme Perfetto tracks + cycle metrics
+        self.obs = obs
         # FU chaining: ops inside a planned FusedRegion (after the head)
         # skip their startup latency — the paper's back-to-back SPM-
         # resident op streams. Off by default so the Table 2/3 numbers
@@ -131,7 +221,12 @@ class CycleSimBackend(BackendBase):
                 [it for i in idxs
                  for it in traces[id(workload.entries[i].program)].items]
                 for idxs in per_hart]
-            timing[scheme] = simulate(cfg, progs)
+            if self.obs is not None and self.obs.enabled:
+                rec = SimRecorder()
+                timing[scheme] = simulate(cfg, progs, recorder=rec)
+                emit_sim_trace(self.obs, scheme, rec, timing[scheme])
+            else:
+                timing[scheme] = simulate(cfg, progs)
         results = tuple(BackendResult(self.name, out)
                         for out in entry_outputs)
         return WorkloadResult(self.name, workload, results, timing)

@@ -62,6 +62,11 @@ def main(argv=None) -> int:
                          "after the sweep")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-point progress lines")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "sweep (per-point wall spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON")
     args = ap.parse_args(argv)
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
@@ -73,13 +78,20 @@ def main(argv=None) -> int:
     if not args.no_cache:
         from repro.kvi.dse.pointcache import PointCache
         cache = PointCache(cache_dir=args.cache_dir)
-    emit = (lambda s: None) if args.quiet else print
+    emit = None if args.quiet else print
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.kvi.obs import Obs
+        obs = Obs.on()
     result, report = run_dse(smoke=args.smoke, seed=args.seed,
                              emit=emit, out_dir=args.out_dir,
                              max_workers=args.jobs,
                              executor=args.executor,
                              measure_pallas=args.measure_pallas,
-                             cache=cache)
+                             cache=cache, obs=obs)
+    if obs is not None:
+        obs.save(trace_path=args.trace_out,
+                 metrics_path=args.metrics_out)
 
     meta = report["meta"]
     print(f"\n# swept {meta['n_points']} points "

@@ -32,7 +32,7 @@ from __future__ import annotations
 import multiprocessing
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Dict, List, Sequence, Union
+from typing import (TYPE_CHECKING, Dict, Iterator, List, Sequence, Union)
 
 from repro.kvi.dse.space import DesignPoint
 from repro.kvi.ir import KviProgram
@@ -62,12 +62,21 @@ def run_job(job: PointJob) -> "PointRecord":
 
 
 class SweepExecutor:
-    """Protocol: map jobs to records, order-preserving."""
+    """Protocol: map jobs to records, order-preserving.
+
+    ``imap_jobs`` is the primitive — a generator yielding records in job
+    order as they complete, which is what lets the sweep driver report
+    live progress (points/s, ETA) mid-fan-out. ``map_jobs`` is the
+    drain-everything convenience every executor inherits."""
 
     name = "base"
 
-    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+    def imap_jobs(self, jobs: Sequence[PointJob]
+                  ) -> Iterator["PointRecord"]:
         raise NotImplementedError
+
+    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+        return list(self.imap_jobs(jobs))
 
 
 class SerialExecutor(SweepExecutor):
@@ -78,8 +87,10 @@ class SerialExecutor(SweepExecutor):
     def __init__(self, max_workers: int = 1):
         del max_workers                  # uniform ctor across executors
 
-    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
-        return [run_job(j) for j in jobs]
+    def imap_jobs(self, jobs: Sequence[PointJob]
+                  ) -> Iterator["PointRecord"]:
+        for j in jobs:
+            yield run_job(j)
 
 
 class ThreadExecutor(SweepExecutor):
@@ -90,9 +101,10 @@ class ThreadExecutor(SweepExecutor):
     def __init__(self, max_workers: int = 4):
         self.max_workers = max(1, max_workers)
 
-    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+    def imap_jobs(self, jobs: Sequence[PointJob]
+                  ) -> Iterator["PointRecord"]:
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
-            return list(ex.map(run_job, jobs))
+            yield from ex.map(run_job, jobs)
 
 
 class ProcessExecutor(SweepExecutor):
@@ -108,14 +120,15 @@ class ProcessExecutor(SweepExecutor):
     def __init__(self, max_workers: int = 4):
         self.max_workers = max(1, max_workers)
 
-    def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
+    def imap_jobs(self, jobs: Sequence[PointJob]
+                  ) -> Iterator["PointRecord"]:
         ctx = multiprocessing.get_context("spawn")
         # chunk so each worker amortizes its interpreter start over
         # several points instead of one round-trip per point
         chunk = max(1, len(jobs) // (self.max_workers * 4))
         with ProcessPoolExecutor(max_workers=self.max_workers,
                                  mp_context=ctx) as ex:
-            return list(ex.map(run_job, jobs, chunksize=chunk))
+            yield from ex.map(run_job, jobs, chunksize=chunk)
 
 
 EXECUTORS = {cls.name: cls

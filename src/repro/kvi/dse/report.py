@@ -328,8 +328,11 @@ def _utilization_bar(busy: int, stall: int, total: int,
     return "█" * n_busy + "▒" * n_stall + "·" * n_idle
 
 
-def render_markdown(report: Dict[str, object]) -> str:
-    """A human-readable walkthrough of the sweep."""
+def render_markdown(report: Dict[str, object],
+                    plots: Optional[Dict[str, List[str]]] = None) -> str:
+    """A human-readable walkthrough of the sweep. ``plots`` maps kernel
+    names to SVG filenames (written next to the markdown by
+    :func:`repro.kvi.dse.plots.write_plots`) to embed as images."""
     lines = ["# Klessydra-T design-space exploration", ""]
     meta = report["meta"]
     lines += [f"- points swept: {meta['n_points']} "
@@ -343,7 +346,12 @@ def render_markdown(report: Dict[str, object]) -> str:
     lines.append("")
 
     for kern, data in report["kernels"].items():
-        lines += [f"## {kern}", "", "### Pareto front "
+        lines += [f"## {kern}", ""]
+        for fname in (plots or {}).get(kern, ()):
+            lines.append(f"![{os.path.splitext(fname)[0]}]({fname})")
+        if (plots or {}).get(kern):
+            lines.append("")
+        lines += ["### Pareto front "
                   "(cycles / area / energy, all minimized)", "",
                   "| point | scheme | D | bits | cycles | area (LUTeq) "
                   "| energy (nJ) |",
@@ -432,34 +440,39 @@ def run_dse(smoke: bool = False, seed: int = 0,
             space: Optional[DesignSpace] = None,
             executor: Optional[str] = None,
             measure_pallas: bool = False,
-            cache=None,
+            cache=None, obs=None,
             ) -> Tuple[SweepResult, Dict[str, object]]:
     """Sweep + report (+ artifacts). Writes ``dse_sweep.json``,
-    ``dse_sweep.csv``, ``dse_report.md`` and ``BENCH_kvi_dse.json``
-    into ``out_dir`` when given. ``executor`` selects the sweep
-    executor (serial/thread/process/auto); ``measure_pallas`` adds the
-    Pallas walltime stage to every point. ``cache`` attaches a
-    persistent :class:`~repro.kvi.dse.pointcache.PointCache` — the
-    sweep then recomputes only points whose inputs changed, and
-    ``dse_cache_stats.json`` lands next to the other artifacts."""
+    ``dse_sweep.csv``, ``dse_report.md`` (with SVG speedup/Pareto
+    figures alongside) and ``BENCH_kvi_dse.json`` into ``out_dir`` when
+    given. ``executor`` selects the sweep executor
+    (serial/thread/process/auto); ``measure_pallas`` adds the Pallas
+    walltime stage to every point. ``cache`` attaches a persistent
+    :class:`~repro.kvi.dse.pointcache.PointCache` — the sweep then
+    recomputes only points whose inputs changed, and
+    ``dse_cache_stats.json`` lands next to the other artifacts.
+    ``obs`` threads a telemetry bundle through the sweep."""
     t0 = time.perf_counter()
     space = space or (smoke_space() if smoke else full_space())
     result = sweep(space, paper_kernel_factory(smoke=smoke, seed=seed),
                    emit=emit, max_workers=max_workers,
                    executor=executor,
                    measure_pallas=True if measure_pallas else None,
-                   cache=cache)
+                   cache=cache, obs=obs)
     report = build_report(result)
     report["meta"]["smoke"] = smoke
     report["meta"]["seed"] = seed
     report["meta"]["total_wall_s"] = round(time.perf_counter() - t0, 3)
     if out_dir is not None:
         import json
+
+        from repro.kvi.dse.plots import write_plots
         os.makedirs(out_dir, exist_ok=True)
         result.save_json(os.path.join(out_dir, "dse_sweep.json"))
         result.save_csv(os.path.join(out_dir, "dse_sweep.csv"))
+        plots = write_plots(result, report, out_dir)
         with open(os.path.join(out_dir, "dse_report.md"), "w") as f:
-            f.write(render_markdown(report))
+            f.write(render_markdown(report, plots=plots))
         with open(os.path.join(out_dir, "BENCH_kvi_dse.json"), "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         if cache is not None:

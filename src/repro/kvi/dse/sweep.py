@@ -59,34 +59,25 @@ from repro.kvi.dse.pointcache import (PointCache, pallas_class_key,
 from repro.kvi.dse.space import (DesignPoint, DesignSpace, preflight_point)
 from repro.kvi.ir import KviProgram
 from repro.kvi.lowering import TraceCache
+from repro.kvi.obs.scrub import DSE_VOLATILE, scrub
 
 #: scheme-dict key under which the swept config is registered
 POINT_KEY = "dse"
 
 #: JSON keys excluded from ``SweepResult.canonical_json()``: wall-clock
-#: measurements (nondeterministic run to run by nature), the executor
-#: label (the one meta field that names *how* the sweep ran rather than
-#: what it measured), and point-cache metadata (the per-record
-#: ``cached`` marker and the hit/miss counters in meta, which by
-#: definition differ between cold and warm runs of identical inputs) —
-#: so executor-equivalence AND cold/warm-equivalence can be asserted
-#: byte-for-byte
-VOLATILE_KEYS = frozenset({"wall_s", "walltime_s", "pallas_walltime_s",
-                           "pallas_compile_s", "pallas_steady_s",
-                           "total_wall_s", "executor",
-                           "cached", "point_cache"})
+#: measurements, the executor label and point-cache metadata — so
+#: executor-equivalence AND cold/warm-equivalence can be asserted
+#: byte-for-byte. The set itself now lives in the shared telemetry
+#: layer (:data:`repro.kvi.obs.scrub.DSE_VOLATILE`); this module keeps
+#: its historical names as aliases.
+VOLATILE_KEYS = DSE_VOLATILE
 
 
 def scrub_volatile(obj, keys: frozenset = VOLATILE_KEYS):
-    """``obj`` with every ``keys`` entry removed, recursively — the
-    canonical (timing- and executor-free) view of a sweep. The serving
-    engine reuses this with its own key set."""
-    if isinstance(obj, dict):
-        return {k: scrub_volatile(v, keys) for k, v in obj.items()
-                if k not in keys}
-    if isinstance(obj, (list, tuple)):
-        return [scrub_volatile(v, keys) for v in obj]
-    return obj
+    """Backwards-compatible alias of the shared
+    :func:`repro.kvi.obs.scrub.scrub` helper — ``obj`` with every
+    ``keys`` entry removed, recursively."""
+    return scrub(obj, keys)
 
 
 @dataclass
@@ -433,7 +424,8 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
           emit: Optional[Callable[[str], None]] = None,
           executor: Union[str, SweepExecutor, None] = None,
           measure_pallas: Optional[bool] = None,
-          cache: Optional[PointCache] = None) -> SweepResult:
+          cache: Optional[PointCache] = None,
+          obs=None, progress_every: int = 16) -> SweepResult:
     """Run every point of ``space`` over the kernels the factory builds
     for that point's precision. Kernel programs are built once per
     distinct precision, optimized once per distinct (precision, passes)
@@ -451,7 +443,13 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
     :class:`~repro.kvi.dse.pointcache.PointCache`: hits are resolved
     here in the parent (workers never touch the store), only misses
     dispatch to the executor, fresh records are stored back, and
-    ``meta["point_cache"]`` reports hit/miss/invalidation counters."""
+    ``meta["point_cache"]`` reports hit/miss/invalidation counters.
+
+    With ``emit`` set, a progress line goes out every ``progress_every``
+    completed fresh points (throughput in points/s, cache hit rate, ETA)
+    as the executor streams records back. ``obs`` attaches a telemetry
+    bundle (:class:`repro.kvi.obs.Obs`): per-point wall spans on the
+    ``dse`` track plus sweep counters in the metrics registry."""
     points = space.points() if isinstance(space, DesignSpace) \
         else tuple(space)
     if not points:
@@ -497,7 +495,20 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
     ex = make_executor(resolve_auto(executor, len(miss_idx)),
                        max_workers=max_workers)
     t0 = time.perf_counter()
-    fresh = ex.map_jobs([jobs[i] for i in miss_idx]) if miss_idx else []
+    fresh: List[PointRecord] = []
+    n_cached = len(points) - len(miss_idx)
+    for rec in (ex.imap_jobs([jobs[i] for i in miss_idx])
+                if miss_idx else ()):
+        fresh.append(rec)
+        done = len(fresh)
+        if emit and progress_every > 0 and \
+                (done % progress_every == 0 or done == len(miss_idx)):
+            dt = time.perf_counter() - t0
+            rate = done / dt if dt > 0 else 0.0
+            eta = (len(miss_idx) - done) / rate if rate > 0 else 0.0
+            emit(f"progress {done}/{len(miss_idx)} fresh points "
+                 f"({n_cached}/{len(points)} cached) "
+                 f"{rate:.1f} pts/s eta {eta:.0f}s")
     wall = time.perf_counter() - t0
     if len(fresh) != len(miss_idx):
         raise RuntimeError(f"executor {ex.name!r} returned "
@@ -540,6 +551,28 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
         meta["pallas"] = pallas_meta
     if cache is not None:
         meta["point_cache"] = cache.stats
+
+    if obs is not None and obs.enabled:
+        # synthetic wall timeline: each point's measured wall_s laid out
+        # end-to-end on one dse lane (cache hits have wall_s == 0 from
+        # the original run but still mark their slot)
+        cur = 0.0
+        for r in records:
+            dur = round(max(float(r.wall_s), 0.0) * 1e6, 3)
+            obs.tracer.span(("dse", "points"), r.point.name,
+                            round(cur, 3), dur, cat="point", clock="wall",
+                            args={"status": r.status,
+                                  "cached": bool(r.cached)})
+            cur += dur
+        m = obs.metrics
+        m.counter("dse.points").inc(len(points))
+        m.counter("dse.points_ok").inc(n_ok)
+        m.absorb("dse.lowering", lowering)
+        if cache is not None:
+            m.absorb("dse.point_cache", cache.stats)
+        if pallas_meta is not None:
+            m.absorb("dse.pallas.compile_cache",
+                     pallas_meta["compile_cache"])
     return SweepResult(list(records), kernel_names, meta=meta)
 
 

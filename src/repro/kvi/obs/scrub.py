@@ -1,0 +1,54 @@
+"""The one volatile-key scrubber every canonical-output producer shares.
+
+Three subsystems emit reports that must be *byte-deterministic* across
+runs, executors and cache temperatures — the DSE sweep
+(``SweepResult.canonical_json``), the serving engine
+(``canonical_report``) and the telemetry layer itself (saved traces and
+metrics snapshots). Each of them measures wall-clock quantities that are
+nondeterministic by nature, so each needs the same operation: "this
+object, with every wall-clock / run-shape field removed, recursively".
+
+Before this module, that operation existed three times (the sweep's
+``VOLATILE_KEYS``, the serving engine's ``SERVE_VOLATILE``, and ad-hoc
+wall-field handling in trace consumers) with the risk of the sets
+drifting apart. Now there is one :func:`scrub` and one place the key
+sets live; ``repro.kvi.dse.sweep`` and ``repro.kvi.serving.engine``
+re-export their historical names from here, and a regression test pins
+byte-identical canonical output across all producers.
+"""
+from __future__ import annotations
+
+#: wall-clock / run-shape fields of the DSE sweep: timing measurements,
+#: the executor label (names *how* the sweep ran, not what it measured)
+#: and point-cache metadata (differs cold vs. warm by definition).
+DSE_VOLATILE = frozenset({"wall_s", "walltime_s", "pallas_walltime_s",
+                          "pallas_compile_s", "pallas_steady_s",
+                          "total_wall_s", "executor",
+                          "cached", "point_cache"})
+
+#: the serving engine's wall-clock / rate fields, on top of the DSE set
+#: (its report embeds backend meta that carries the DSE names).
+SERVE_VOLATILE = DSE_VOLATILE | frozenset(
+    {"req_per_s", "execute_s", "prewarm_s", "engine_s"})
+
+#: wall-clock fields telemetry events and metrics snapshots carry next
+#: to their deterministic virtual-cycle payload.
+TRACE_VOLATILE = frozenset({"wall_s", "wall_us", "dur_wall_us",
+                            "points_per_s", "eta_s"})
+
+#: the union — safe as a default because the sets are disjoint from
+#: every deterministic key any producer emits (pinned by tests).
+ALL_VOLATILE = DSE_VOLATILE | SERVE_VOLATILE | TRACE_VOLATILE
+
+
+def scrub(obj, keys: frozenset = ALL_VOLATILE):
+    """``obj`` with every ``keys`` entry removed, recursively — the
+    canonical (timing- and executor-free) view of a report, trace or
+    metrics snapshot. Dicts and lists/tuples are rebuilt; scalars pass
+    through."""
+    if isinstance(obj, dict):
+        return {k: scrub(v, keys) for k, v in obj.items()
+                if k not in keys}
+    if isinstance(obj, (list, tuple)):
+        return [scrub(v, keys) for v in obj]
+    return obj

@@ -283,13 +283,16 @@ class PallasBackend(BackendBase):
                  max_fused_ops: int = MAX_FUSED_OPS,
                  max_fused_inputs: int = MAX_FUSED_INPUTS,
                  passes=None, verify: bool = False,
-                 kernel_cache: Optional[KernelCache] = None):
+                 kernel_cache: Optional[KernelCache] = None, obs=None):
         self.interpret = INTERPRET if interpret is None else interpret
         self.block = block
         self.max_fused_ops = max_fused_ops
         self.max_fused_inputs = max_fused_inputs
         self.passes = passes
         self.verify = verify
+        # optional telemetry bundle (repro.kvi.obs.Obs): wall-domain
+        # spans per run_workload + compile-cache / dispatch counters
+        self.obs = obs
         self.kernel_cache = kernel_cache if kernel_cache is not None \
             else KernelCache()
         self.fused_calls = 0             # observability: pallas_call count
@@ -461,11 +464,25 @@ class PallasBackend(BackendBase):
         results = tuple(BackendResult(self.name, out)
                         for out in entry_outputs)
         calls = self.fused_calls + self.reduce_calls - calls_before
+        cc = {"hits": self.kernel_cache.hits - cc_before[0],
+              "misses": self.kernel_cache.misses - cc_before[1]}
+        wall_s = round(time.perf_counter() - t0, 6)
+        if self.obs is not None and self.obs.enabled:
+            tr = self.obs.tracer
+            start_us = tr.wall_us() - wall_s * 1e6
+            tr.span(("pallas", "run_workload"), "run_workload",
+                    round(max(0.0, start_us), 3), round(wall_s * 1e6, 3),
+                    cat="wall", clock="wall",
+                    args={"entries": len(workload.entries),
+                          "groups": len(groups), "pallas_calls": calls})
+            m = self.obs.metrics
+            m.counter("pallas.runs").inc()
+            m.counter("pallas.calls").inc(calls)
+            m.absorb("pallas.compile_cache", cc)
+            m.histogram("pallas.run_wall_s").observe(wall_s)
         return WorkloadResult(
             self.name, workload, results,
             meta={"groups": len(groups),
                   "pallas_calls": calls,
-                  "compile_cache": {
-                      "hits": self.kernel_cache.hits - cc_before[0],
-                      "misses": self.kernel_cache.misses - cc_before[1]},
-                  "wall_s": round(time.perf_counter() - t0, 6)})
+                  "compile_cache": cc,
+                  "wall_s": wall_s})

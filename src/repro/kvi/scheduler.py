@@ -109,11 +109,14 @@ class HartScheduler:
     def __init__(self, n_harts: int = 3,
                  estimator: Optional[Callable[[KviProgram], int]] = None,
                  est_config: Optional[KlessydraConfig] = None,
-                 trace_cache: Optional[TraceCache] = None):
+                 trace_cache: Optional[TraceCache] = None, obs=None):
         self.n_harts = n_harts
         self._estimator = estimator
         self._est_cfg = est_config or _EST_CFG
         self.trace_cache = trace_cache
+        # optional telemetry bundle (repro.kvi.obs.Obs): ticket spans on
+        # per-hart scheduler lanes + admission counters / queue gauge
+        self.obs = obs
         self._est_cache: Dict[tuple, int] = {}   # structure -> cycles
         self._tids = itertools.count()
         self.queue: List[Ticket] = []
@@ -138,6 +141,10 @@ class HartScheduler:
         """Queue one program; returns its ticket."""
         t = Ticket(next(self._tids), program, self.estimate(program))
         self.queue.append(t)
+        if self.obs is not None and self.obs.enabled:
+            self.obs.metrics.counter("scheduler.submitted").inc()
+            self.obs.metrics.gauge("scheduler.queue_depth").set(
+                len(self.queue))
         return t
 
     def admit(self, program: KviProgram, now: int = 0,
@@ -155,6 +162,7 @@ class HartScheduler:
         t = Ticket(next(self._tids), program, est, hart=h, start_est=start)
         self.hart_free[h] = start + est
         self.dispatched.append(t)
+        self._record_ticket(t)
         return t
 
     # ------------------------------------------------------------------
@@ -180,11 +188,26 @@ class HartScheduler:
             t.hart, t.start_est = h, load
             heapq.heappush(loads, (load + t.est_cycles, next(seq), h))
             entries.append(WorkloadEntry(t.program, HartAssignment(h)))
+            self._record_ticket(t)
         self.dispatched.extend(self.queue)
         self.queue = []
         return KviWorkload(name, tuple(entries),
                            meta={"scheduler": "earliest_finish",
                                  "n_harts": self.n_harts})
+
+    def _record_ticket(self, t: Ticket) -> None:
+        """Telemetry for one placed ticket: an estimated-occupancy span
+        on the ticket's hart lane plus admission counters."""
+        if self.obs is None or not self.obs.enabled:
+            return
+        self.obs.tracer.span(
+            ("scheduler", f"hart{t.hart}"),
+            getattr(t.program, "name", None) or f"ticket{t.tid}",
+            t.start_est, t.est_cycles, cat="ticket",
+            args={"tid": t.tid})
+        self.obs.metrics.counter("scheduler.admitted").inc()
+        self.obs.metrics.histogram("scheduler.est_cycles").observe(
+            t.est_cycles)
 
     def run(self, backend, name: str = "scheduled") -> WorkloadResult:
         """Dispatch whatever is queued and execute it on ``backend``."""

@@ -52,6 +52,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write the report JSON here (default stdout)")
     ap.add_argument("--canonical", action="store_true",
                     help="emit the wall-clock-scrubbed canonical report")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "run (request flows, hart lanes, step windows)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON")
     return ap
 
 
@@ -71,16 +76,27 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.save_trace:
         save_trace(specs, args.save_trace)
 
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.kvi.obs import Obs
+        obs = Obs.on()
+
     backend = None
     if not args.no_backend:
         from repro.kvi.backend import get_backend
-        backend = get_backend("pallas", passes=())
+        backend = get_backend("pallas", passes=(), obs=obs)
 
     engine = ServeEngine(templates, n_harts=args.harts, backend=backend,
                          batching=not args.no_batching,
                          max_batch=args.max_batch, seed=args.seed,
-                         prewarm=not args.no_prewarm)
+                         prewarm=not args.no_prewarm, obs=obs)
     report = engine.run(specs)
+    if obs is not None:
+        obs.save(trace_path=args.trace_out,
+                 metrics_path=args.metrics_out)
+        for path in (args.trace_out, args.metrics_out):
+            if path:
+                print(f"telemetry -> {path}", file=sys.stderr)
     text = canonical_report(report) if args.canonical else \
         json.dumps(report, indent=2, sort_keys=True)
     if args.out:
