@@ -1,10 +1,15 @@
 """Batched-execution benchmark: the perf trajectory for KviWorkload.
 
-Two measurements, emitted to ``BENCH_kvi_batch.json``:
+Three measurements, emitted to ``BENCH_kvi_batch.json``:
 
   * cyclesim — composite-workload cycles per coprocessor scheme (the
     paper's conv32 / fft256 / matmul64 on harts 0/1/2), i.e. the numbers
     the hart-aware batch path must keep reproducing.
+  * sim_perf — wall time of the optimized simulator event loop
+    (``Simulator.run``) against the retained reference loop
+    (``Simulator._run_reference``) on the composite workload; the
+    ``speedup`` column pins the event-loop micro-optimization
+    (precomputed dispatch fields, strided scalar-run accounting).
   * pallas — wall time for N homogeneous program instances dispatched
     one ``run()`` at a time vs. one batched ``run_workload()`` (batch
     grid dimension: one compile + one dispatch per fused segment for the
@@ -33,6 +38,63 @@ def _conv_instances(S: int, n_instances: int, seed: int = 0):
     return [conv2d_program(
         rng.integers(-128, 128, (S, S)).astype(np.int32), filt, shift=4)
         for _ in range(n_instances)]
+
+
+def _sim_perf_case(emit, seed: int = 0, n_items: int = 2000,
+                   repeats: int = 3) -> dict:
+    """Optimized vs reference simulator event loop on one deterministic
+    synthetic workload (the shapes the DSE search's confirmation rounds
+    hammer): three harts of mixed vector/LSU/scalar items, het-MIMD
+    contention. Asserts identical results before timing."""
+    import random
+
+    from benchmarks.paper_data import make_config
+    from repro.core.isa import OPDEFS, Instr, Scalar
+    from repro.core.simulator import Simulator
+
+    rng = random.Random(seed)
+    ops = list(OPDEFS)
+
+    def prog(n):
+        items = []
+        for _ in range(n):
+            if rng.random() < 0.3:
+                items.append(Scalar(rng.randrange(1, 40)))
+            else:
+                items.append(Instr(rng.choice(ops), dst=0, src1=4,
+                                   src2=8 if rng.random() < 0.5
+                                   else None,
+                                   length=rng.randrange(1, 300)))
+        return items
+
+    programs = [prog(n_items) for _ in range(3)]
+    sim = Simulator(make_config("HetMIMD", 8))
+
+    ref = sim._run_reference(programs)
+    opt = sim.run(programs)
+    identical = (opt.cycles == ref.cycles
+                 and opt.mfu_busy_cycles == ref.mfu_busy_cycles
+                 and opt.lsu_busy_cycles == ref.lsu_busy_cycles
+                 and all(a.breakdown() == b.breakdown()
+                         for a, b in zip(opt.per_hart, ref.per_hart)))
+
+    opt_s = min(_timed(sim.run, programs) for _ in range(repeats))
+    ref_s = min(_timed(sim._run_reference, programs)
+                for _ in range(repeats))
+    row = {"n_items": 3 * n_items, "cycles": opt.cycles,
+           "optimized_s": round(opt_s, 4), "reference_s": round(ref_s, 4),
+           "speedup": round(ref_s / max(opt_s, 1e-9), 2),
+           "identical_results": identical}
+    emit(f"simulator  {row['n_items']} items: optimized {opt_s:.4f}s vs "
+         f"reference {ref_s:.4f}s -> {row['speedup']:.2f}x "
+         f"(identical={identical})")
+    return row
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
 
 
 def _pallas_batch_case(S: int, n_instances: int, emit,
@@ -85,6 +147,9 @@ def run(emit, seed: int = 0) -> dict:
         emit(f"{key:12s} conv32={r['conv32']:.0f} fft256={r['fft256']:.0f} "
              f"matmul64={r['matmul64']:.0f} total={r['total_cycles']}")
 
+    emit("# --- sim_perf: optimized vs reference event loop ---")
+    sim_perf = _sim_perf_case(emit, seed)
+
     emit("# --- pallas: batched vs per-program dispatch ---")
     pallas = [
         _pallas_batch_case(8, 8, emit, seed),
@@ -92,11 +157,14 @@ def run(emit, seed: int = 0) -> dict:
     ]
 
     out = {"seed": seed,
-           "cyclesim_composite": cyclesim, "pallas_batch": pallas,
+           "cyclesim_composite": cyclesim, "sim_perf": sim_perf,
+           "pallas_batch": pallas,
            "checks": {
                "batched_fewer_dispatches": all(
                    row["batched_pallas_calls"] < row["per_program_pallas_calls"]
-                   for row in pallas)}}
+                   for row in pallas),
+               "sim_loop_faster": sim_perf["speedup"] > 1.0
+               and sim_perf["identical_results"]}}
     return out
 
 

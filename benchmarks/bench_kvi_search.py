@@ -1,0 +1,92 @@
+"""Auto-tuner benchmark: search vs enumerate on the smoke space.
+
+Runs the budget-constrained search (``repro.kvi.dse.search``) twice
+with the same seed on the 36-point smoke space, then scores it against
+the exhaustive sweep the driver confirms as a yardstick. Emitted to
+``BENCH_kvi_search.json``:
+
+  * evaluations — analytic scores vs cycle-accurate sims requested
+    (the persistent-cache-independent budget accounting) and the
+    fraction of the exhaustive grid that cost;
+  * front_recovery — fraction of the exhaustive Pareto front the
+    search's confirmed front covers (the <=50%-of-evals acceptance
+    gate lives on these two numbers);
+  * walltime — search vs exhaustive-confirmation wall seconds
+    (cache-temperature dependent, reported for context);
+  * deterministic — byte-identity of the two same-seed runs'
+    volatile-scrubbed canonical reports.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_kvi_search [--out PATH]
+or through the harness:  python -m benchmarks.run --only kvi_search
+(--seed is forwarded to the search RNG and the kernel input data).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def run(emit, seed: int = 0, strategy: str = "successive_halving",
+        out_dir: str = None) -> dict:
+    from repro.kvi.dse.pointcache import PointCache
+    from repro.kvi.dse.search import run_search
+
+    results = []
+    for rep in range(2):
+        res = run_search(strategy=strategy, smoke=True, seed=seed,
+                         compare_exhaustive=True,
+                         cache=PointCache(),
+                         out_dir=out_dir if rep == 0 else None,
+                         emit=None)
+        results.append(res)
+    res, res2 = results
+    deterministic = res.canonical_json() == res2.canonical_json()
+
+    ev = res.evaluations
+    rec = res.meta["recovery"]
+    frac = res.exhaustive_fraction
+    emit(f"{strategy} seed {seed}: {ev['high_evals']} sims "
+         f"({frac:.1%} of {res.meta['grid_size']} points), "
+         f"{ev['low_evals']} analytic scores")
+    emit(f"front recovery {rec['front_recovery']:.1%} of "
+         f"{rec['exhaustive_front_size']} members; search "
+         f"{res.meta['walltime_s']}s vs exhaustive-remainder "
+         f"{rec['walltime_s']}s; deterministic={deterministic}")
+
+    return {
+        "seed": seed, "strategy": strategy,
+        "grid_size": res.meta["grid_size"],
+        "evaluations": dict(ev),
+        "exhaustive_fraction": round(frac, 6),
+        "front_recovery": rec["front_recovery"],
+        "exhaustive_front_size": rec["exhaustive_front_size"],
+        "best": res.best.point.name if res.best else None,
+        "search_walltime_s": res.meta["walltime_s"],
+        "exhaustive_walltime_s": rec["walltime_s"],
+        "trajectory": list(res.trajectory),
+        "rungs": list(res.rungs),
+        "checks": {
+            "front_recovered": rec["front_recovery"] == 1.0,
+            "within_half_budget": frac is not None and frac <= 0.5,
+            "deterministic": deterministic,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kvi_search.json")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="search RNG + kernel input data seed")
+    ap.add_argument("--strategy", default="successive_halving")
+    args = ap.parse_args(argv)
+    result = run(emit=print, seed=args.seed, strategy=args.strategy)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,7 +48,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: table2,fig2,fig3,fig4,table3,kernels,"
                          "roofline,kvi_batch,kvi_passes,kvi_dse,"
-                         "kvi_serve")
+                         "kvi_search,kvi_serve")
     ap.add_argument("--seed", type=int, default=None,
                     help="input-data seed, forwarded to seed-aware "
                          "benchmarks (error if a selected benchmark "
@@ -56,9 +56,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_kvi_batch, bench_kvi_dse, bench_kvi_passes,
-                            bench_kvi_serve, fig2_dlp_tlp, fig3_exec_time,
-                            fig4_energy, kernel_micro, roofline_report,
-                            table2_cycles, table3_filters)
+                            bench_kvi_search, bench_kvi_serve, fig2_dlp_tlp,
+                            fig3_exec_time, fig4_energy, kernel_micro,
+                            roofline_report, table2_cycles, table3_filters)
     benches = {
         "table2": (table2_cycles,
                    lambda r: f"geomean_fit={r['checks']['fit_geomean_ratio']:.2f}"),
@@ -75,7 +75,9 @@ def main(argv=None) -> int:
                      lambda r: f"cells={len(r['rows'])}"),
         "kvi_batch": (bench_kvi_batch,
                       lambda r: "batched_fewer_dispatches="
-                      f"{r['checks']['batched_fewer_dispatches']}"),
+                      f"{r['checks']['batched_fewer_dispatches']},"
+                      "sim_speedup="
+                      f"{r['sim_perf']['speedup']}x"),
         "kvi_passes": (bench_kvi_passes,
                        lambda r: "cyclesim_reduced="
                        f"{r['checks']['cyclesim_reduced']},"
@@ -86,6 +88,13 @@ def main(argv=None) -> int:
                     f"{r['checks']['pareto_ordering_ok']},"
                     "subword_2x="
                     f"{r['checks']['subword_2x_on_mfu_bound']}"),
+        "kvi_search": (bench_kvi_search,
+                       lambda r: "front_recovered="
+                       f"{r['checks']['front_recovered']},"
+                       "within_half_budget="
+                       f"{r['checks']['within_half_budget']},"
+                       "deterministic="
+                       f"{r['checks']['deterministic']}"),
         "kvi_serve": (bench_kvi_serve,
                       lambda r: "speedup="
                       f"{r['checks']['batching_speedup_x']}x,"

@@ -15,14 +15,22 @@ The paper's analysis, reproducible end to end:
      non-dominated front over (cycles, area, energy), speedup-vs-D
      curves, and the paper's scheme-ordering story as checks.
 
+Enumeration has a budget-constrained inverse:
+:mod:`~repro.kvi.dse.search` *searches* the same space — analytic
+ranking (:func:`~repro.kvi.dse.cost.estimate_kernel`) screens sampled
+candidates, and only survivors spend cycle-accurate simulations.
+
 CLI::
 
     PYTHONPATH=src python -m repro.kvi.dse --smoke   # CI-sized sweep
     PYTHONPATH=src python -m repro.kvi.dse           # paper-scale sweep
+    PYTHONPATH=src python -m repro.kvi.dse search --smoke  # auto-tuner
 """
 from repro.kvi.dse.cost import (CALIBRATION, CALIBRATION_FIT_MAX_REL_ERR,
-                                HardwareCost, calibration_fit,
-                                energy_model, hardware_cost)
+                                HardwareCost, KernelProfile,
+                                calibration_fit, energy_model,
+                                estimate_kernel, hardware_cost,
+                                kernel_profile)
 from repro.kvi.dse.executors import (AUTO_SERIAL_MAX, EXECUTORS, PointJob,
                                      ProcessExecutor, SerialExecutor,
                                      SweepExecutor, ThreadExecutor,
@@ -34,21 +42,30 @@ from repro.kvi.dse.pointcache import (PointCache, default_cache_dir,
 from repro.kvi.dse.report import (build_report, full_space, render_markdown,
                                   run_dse, smoke_space)
 from repro.kvi.dse.space import (SCHEMES, DesignPoint, DesignSpace,
-                                 preflight_point, scheme_config)
+                                 SpaceConstraints, preflight_point,
+                                 scheme_config)
+from repro.kvi.dse.search import (STRATEGIES, CandidateSampler,
+                                  SearchBudget, SearchResult,
+                                  TwoFidelityEvaluator, front_recovery,
+                                  run_search)
 from repro.kvi.dse.sweep import (PointRecord, SweepResult,
                                  measure_pallas_points,
                                  paper_kernel_factory, run_point, sweep)
 
 __all__ = [
+    "STRATEGIES", "CandidateSampler", "SearchBudget", "SearchResult",
+    "TwoFidelityEvaluator", "front_recovery", "run_search",
     "CALIBRATION", "CALIBRATION_FIT_MAX_REL_ERR", "HardwareCost",
-    "calibration_fit", "energy_model", "hardware_cost",
+    "KernelProfile", "calibration_fit", "energy_model",
+    "estimate_kernel", "hardware_cost", "kernel_profile",
     "AUTO_SERIAL_MAX", "EXECUTORS", "PointJob", "ProcessExecutor",
     "SerialExecutor", "SweepExecutor", "ThreadExecutor", "make_executor",
     "resolve_auto", "PointCache", "default_cache_dir", "pallas_class_key",
     "point_key", "program_fingerprint",
     "dominates", "front_metrics", "pareto_front", "build_report",
     "full_space", "render_markdown", "run_dse", "smoke_space", "SCHEMES",
-    "DesignPoint", "DesignSpace", "preflight_point", "scheme_config",
+    "DesignPoint", "DesignSpace", "SpaceConstraints", "preflight_point",
+    "scheme_config",
     "PointRecord", "SweepResult", "measure_pallas_points",
     "paper_kernel_factory", "run_point", "sweep",
 ]

@@ -1,10 +1,21 @@
 """CLI: ``python -m repro.kvi.dse [--smoke] [--out-dir DIR] ...``
+     or ``python -m repro.kvi.dse search [--smoke] [--strategy S] ...``
 
-Runs the design-space sweep over the paper's kernels, writes the
-artifacts (``dse_sweep.json``, ``dse_sweep.csv``, ``dse_report.md``,
-``BENCH_kvi_dse.json``, ``dse_cache_stats.json``) and exits non-zero
-when any acceptance check fails (all schemes covered, Pareto scheme
-ordering, sub-word >= 2x on the MFU-bound kernels).
+Without a subcommand, runs the exhaustive design-space sweep over the
+paper's kernels, writes the artifacts (``dse_sweep.json``,
+``dse_sweep.csv``, ``dse_report.md``, ``BENCH_kvi_dse.json``,
+``dse_cache_stats.json``) and exits non-zero when any acceptance check
+fails (all schemes covered, Pareto scheme ordering, sub-word >= 2x on
+the MFU-bound kernels).
+
+``search`` runs the budget-constrained auto-tuner instead
+(:mod:`repro.kvi.dse.search`): sample feasible candidates, rank them
+with the analytic cost model, spend cycle-accurate simulations only on
+survivors. Writes ``dse_search.json`` / ``dse_search_canonical.json``
+/ ``dse_search.md`` / ``dse_search_trajectory.svg`` /
+``BENCH_kvi_search.json``; with ``--smoke`` it also confirms the rest
+of the grid and exits non-zero unless the search recovered the full
+exhaustive Pareto front within half the grid's simulations.
 
 ``--executor {auto,serial,thread,process}`` selects the sweep executor
 (default ``auto``: serial for small uncached fan-outs, the spawn
@@ -27,7 +38,130 @@ import json
 import sys
 
 
+def search_main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.kvi.dse search",
+        description="budget-constrained design-space auto-tuner")
+    ap.add_argument("--smoke", action="store_true",
+                    help="36-point CI space + exhaustive yardstick: "
+                         "fails unless the full Pareto front is "
+                         "recovered within half the grid's sims")
+    ap.add_argument("--strategy", default="successive_halving",
+                    help="search strategy (default successive_halving)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max cycle-accurate evaluations (default: "
+                         "half the grid, capped)")
+    ap.add_argument("--pool", type=int, default=None,
+                    help="candidate pool screened analytically "
+                         "(default: 8x budget, capped at the grid)")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="low-fidelity dominance relaxation (default "
+                         "0.02 — the estimator's error margin)")
+    ap.add_argument("--max-area", type=float, default=None,
+                    metavar="LUTEQ",
+                    help="feasibility constraint: analytic area budget")
+    ap.add_argument("--max-static-nj", type=float, default=None,
+                    metavar="NJ",
+                    help="feasibility constraint: static nJ/cycle "
+                         "budget")
+    ap.add_argument("--compare-exhaustive", action="store_true",
+                    help="confirm the remaining grid afterwards and "
+                         "score front recovery (implied by --smoke)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where to write search artifacts")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="search RNG + kernel input data seed")
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="confirmation worker count")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "serial", "thread", "process"),
+                    help="confirmation executor (default auto: serial "
+                         "for tiny budgets, persistent process pool "
+                         "otherwise)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent point-cache directory (shared "
+                         "with the exhaustive sweep)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent point cache")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress progress lines")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON")
+    args = ap.parse_args(argv)
+    if args.no_cache and args.cache_dir:
+        ap.error("--no-cache and --cache-dir are mutually exclusive")
+
+    from repro.kvi.dse.search import STRATEGIES, run_search
+    if args.strategy not in STRATEGIES:
+        ap.error(f"unknown strategy {args.strategy!r}; choose from "
+                 f"{', '.join(sorted(STRATEGIES))}")
+    constraints = None
+    if args.max_area is not None or args.max_static_nj is not None:
+        from repro.kvi.dse.space import SpaceConstraints
+        constraints = SpaceConstraints(
+            max_area_luteq=args.max_area,
+            max_static_nj_per_cycle=args.max_static_nj)
+    cache = None
+    if not args.no_cache:
+        from repro.kvi.dse.pointcache import PointCache
+        cache = PointCache(cache_dir=args.cache_dir)
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.kvi.obs import Obs
+        obs = Obs.on()
+    result = run_search(
+        strategy=args.strategy, smoke=args.smoke, seed=args.seed,
+        budget=args.budget, pool=args.pool,
+        **({"eps": args.eps} if args.eps is not None else {}),
+        constraints=constraints,
+        compare_exhaustive=True if (args.smoke
+                                    or args.compare_exhaustive)
+        else None,
+        emit=None if args.quiet else print, out_dir=args.out_dir,
+        max_workers=args.jobs, executor=args.executor,
+        cache=cache, obs=obs)
+    if obs is not None:
+        obs.save(trace_path=args.trace_out,
+                 metrics_path=args.metrics_out)
+
+    ev = result.evaluations
+    frac = result.exhaustive_fraction
+    print(f"\n# search[{result.strategy}] seed {result.seed}: "
+          f"{ev['high_evals']} sims "
+          f"({frac:.1%} of the {result.meta['grid_size']}-point grid), "
+          f"{ev['low_evals']} analytic scores, "
+          f"front size {len(result.front)} "
+          f"in {result.meta['walltime_s']}s")
+    if result.best is not None:
+        print(f"# best: {result.best.point.name}")
+    failed = []
+    rec = result.meta.get("recovery")
+    if rec is not None:
+        print(f"# front recovery: {rec['front_recovery']:.1%} of "
+              f"{rec['exhaustive_front_size']} exhaustive front "
+              f"members (exhaustive confirm took "
+              f"{rec['walltime_s']}s)")
+        if args.smoke:
+            if rec["front_recovery"] < 1.0:
+                failed.append("front_recovery == 1.0")
+            if frac is not None and frac > 0.5:
+                failed.append("high_evals <= 50% of grid")
+    print(f"# wrote dse_search.json / dse_search.md / "
+          f"BENCH_kvi_search.json under {args.out_dir}")
+    if failed:
+        print(f"# FAILED checks: {', '.join(failed)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "search":
+        return search_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.kvi.dse")
     ap.add_argument("--smoke", action="store_true",
                     help="small kernels + default axes (CI-sized, <60s)")

@@ -25,7 +25,7 @@ single knob future synthesis-data calibration should touch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -82,6 +82,17 @@ CALIBRATION: Dict[str, object] = {
     "core_nj_per_cycle": 0.35,
     "mfu_nj_per_active_lane_cycle": 0.011,
     "lsu_nj_per_active_cycle": 0.14,
+    # low-fidelity cycle estimator (the search tuner's cheap rung):
+    # per-op issue/dependency overhead exposed when a hart's own program
+    # chain is the bound (per-hart sym/het schemes; in the shared scheme
+    # the saturated SPMI hides it), and the contention factor of the
+    # heterogeneous scheme's shared unit pool (per-hart dependency
+    # chains prevent the perfect cross-unit overlap a pure capacity
+    # bound assumes). Fit once against the cycle-accurate simulator on
+    # the smoke space (act/est within ~7% per scheme, rank correlation
+    # 0.99) — see tests/kvi/test_search.py.
+    "est_issue_overhead_cycles": 2.0,
+    "est_het_pool_factor": 1.15,
 }
 
 
@@ -245,6 +256,165 @@ def calibration_fit(table3: Optional[Dict] = None) -> Dict[str, object]:
             "mean_rel_err": round(float(np.mean(rel_errs)), 4),
             "threshold": CALIBRATION_FIT_MAX_REL_ERR,
             "ok": bool(max_err <= CALIBRATION_FIT_MAX_REL_ERR)}
+
+
+# ---------------------------------------------------------------------------
+# Low-fidelity analytic cycle estimation (the search tuner's cheap rung)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelProfile:
+    """Static per-program operand arrays — everything the closed-form
+    cycle estimator needs, extracted **once** per optimized program (no
+    lowering, no SPM allocation, no simulation). All arrays are aligned
+    over the program's coprocessor instructions:
+
+      * ``lengths`` / ``elem_bytes`` — vector shape per op,
+      * ``n_src`` — vector sources streamed per result line (the SPMI
+        read-port pressure),
+      * ``unit_idx`` — index into :data:`~repro.configs.base.MFU_UNITS`
+        (-1 for LSU transfers),
+      * ``mem_bytes`` — transfer size of LSU ops (0 for MFU ops),
+      * ``chainable`` — ops a chaining-enabled lowering would discount
+        (interior of a planned fused region, from the same static
+        fusion-plan metadata ``lowering._chained_items`` reads).
+
+    The estimator is a *rank* model: it reproduces the contention
+    structure (per-scheme serialization, shared LSU port, het per-unit
+    pools) that orders design points, not exact cycle counts — the
+    search confirms survivors on the cycle-accurate simulator."""
+
+    name: str
+    lengths: np.ndarray
+    elem_bytes: np.ndarray
+    n_src: np.ndarray
+    unit_idx: np.ndarray
+    mem_bytes: np.ndarray
+    chainable: np.ndarray
+    n_scalar: int = 0
+
+
+def kernel_profile(program) -> KernelProfile:
+    """Build the :class:`KernelProfile` of one (optimized) KVI program."""
+    from repro.kvi.ir import KviInstr
+    from repro.kvi.lowering import _chained_items
+    from repro.core.isa import OPDEFS
+
+    unit_of = {u: i for i, u in enumerate(MFU_UNITS)}
+    chained = _chained_items(program)
+    lengths, ebs, n_src, unit_idx, mem_bytes, chainable = \
+        [], [], [], [], [], []
+    n_scalar = 0
+    for idx, it in enumerate(program.items):
+        if not isinstance(it, KviInstr):
+            n_scalar += it.count
+            continue
+        od = OPDEFS[it.op.value]
+        lengths.append(it.length)
+        ebs.append(it.elem_bytes)
+        if od.engine == "lsu":
+            unit_idx.append(-1)
+            n_src.append(0)
+            mem_bytes.append(it.length * it.elem_bytes)
+        else:
+            unit_idx.append(unit_of[od.unit.value])
+            n_src.append(max(int(it.src1 is not None)
+                             + int(it.src2 is not None), 1))
+            mem_bytes.append(0)
+        chainable.append(idx in chained)
+    return KernelProfile(
+        program.name,
+        np.asarray(lengths, dtype=np.int64),
+        np.asarray(ebs, dtype=np.int64),
+        np.asarray(n_src, dtype=np.int64),
+        np.asarray(unit_idx, dtype=np.int64),
+        np.asarray(mem_bytes, dtype=np.int64),
+        np.asarray(chainable, dtype=bool),
+        n_scalar)
+
+
+def estimate_kernel(profile: KernelProfile, cfg: KlessydraConfig,
+                    chaining: bool = False) -> Dict[str, float]:
+    """Closed-form cycle + energy estimate of the paper's homogeneous
+    protocol (``profile`` replicated on every hart of ``cfg``) —
+    vectorized numpy over the profile's op arrays, thousands of points
+    per second.
+
+    The contention structure mirrors the simulator's resource model:
+    per-op SPMI streaming (``n_src`` lines per result line) and
+    line-rate unit occupancy; the shared scheme serializes every stream
+    on one SPMI, sym-MIMD runs per-hart, het-MIMD pools F x fu_count
+    instances per internal unit; the single 32-bit memory port is
+    shared by all schemes."""
+    H = cfg.harts
+    setup = cfg.vector_setup_cycles
+    is_mfu = profile.unit_idx >= 0
+    eff_eb = np.maximum(profile.elem_bytes, cfg.subword_bits // 8)
+    lanes = cfg.D * np.maximum(1, 4 // eff_eb)
+    lines = np.ceil(profile.lengths / np.maximum(lanes, 1)).astype(np.int64)
+    unit_c = np.where(is_mfu, setup + lines, 0)
+    spmi_c = np.where(is_mfu, setup + profile.n_src * lines, 0)
+    lsu_c = np.where(
+        ~is_mfu,
+        setup + cfg.mem_latency_cycles
+        + np.ceil(profile.mem_bytes / cfg.mem_port_bytes).astype(np.int64),
+        0)
+    if chaining:
+        disc = np.where(profile.chainable & is_mfu, setup, 0)
+        unit_c = np.maximum(np.where(is_mfu, 1, 0), unit_c - disc)
+        spmi_c = np.maximum(np.where(is_mfu, 1, 0), spmi_c - disc)
+    op_dur = np.maximum(np.maximum(unit_c, spmi_c), lsu_c)
+
+    c0 = CALIBRATION["est_issue_overhead_cycles"]
+    if cfg.M == 1 and cfg.F == 1:            # shared: one SPMI, one MFU
+        est = H * float(op_dur.sum()) + profile.n_scalar
+    else:
+        t_serial = float((op_dur + c0).sum()) + profile.n_scalar
+        t_lsu = float(lsu_c.sum()) + c0 * int((~is_mfu).sum())
+        if cfg.F == cfg.M and cfg.F > 1:     # sym: only the LSU port shared
+            est = max(t_serial, H * t_lsu)
+        else:                                # het: per-internal-unit pools
+            pool_bound = 0.0
+            for i, unit in enumerate(MFU_UNITS):
+                tu = float(unit_c[profile.unit_idx == i].sum())
+                pool_bound = max(pool_bound,
+                                 H * tu / (cfg.F * cfg.fu_count(unit)))
+            est = CALIBRATION["est_het_pool_factor"] \
+                * max(t_serial, H * t_lsu, pool_bound)
+    est = max(est, 1.0)
+
+    mfu_busy = H * float(np.where(is_mfu, op_dur, 0).sum())
+    lsu_busy = H * float(lsu_c.sum())
+    static = energy_per_cycle_static(cfg) * est
+    c = CALIBRATION
+    energy = (static + c["mfu_nj_per_active_lane_cycle"] * cfg.D * mfu_busy
+              + c["lsu_nj_per_active_cycle"] * lsu_busy)
+    return {"est_cycles": est, "est_energy_nj": energy}
+
+
+def batch_estimate(profiles: Dict[str, KernelProfile], points,
+                   ) -> List[Dict[str, object]]:
+    """Low-fidelity scores for an explicit point list: per point, the
+    analytic area plus per-kernel ``est_cycles`` / ``est_energy_nj``.
+    ``profiles`` may be keyed per precision (``(precision_bits ->
+    {kernel: profile})``) or flat (``{kernel: profile}`` applied to all
+    points). Pure closed-form — safe to call on thousands of points."""
+    out: List[Dict[str, object]] = []
+    per_prec = profiles and all(
+        isinstance(k, int) for k in profiles)
+    for pt in points:
+        cfg = pt.config()
+        kern_profiles = profiles[pt.precision_bits] if per_prec \
+            else profiles
+        row: Dict[str, object] = {
+            "point": pt.name,
+            "area_luteq": hardware_cost(cfg).area_luteq,
+            "kernels": {name: estimate_kernel(prof, cfg,
+                                              chaining=pt.chaining)
+                        for name, prof in kern_profiles.items()}}
+        out.append(row)
+    return out
 
 
 def energy_model(cfg: KlessydraConfig, sim) -> Dict[str, float]:

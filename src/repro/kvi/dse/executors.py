@@ -78,6 +78,11 @@ class SweepExecutor:
     def map_jobs(self, jobs: Sequence[PointJob]) -> List["PointRecord"]:
         return list(self.imap_jobs(jobs))
 
+    def close(self) -> None:
+        """Release any held worker pool. A no-op for per-call executors;
+        persistent executors (see :class:`ProcessExecutor`) shut their
+        long-lived pool down here. Idempotent."""
+
 
 class SerialExecutor(SweepExecutor):
     """One job at a time in the calling thread — the reference order."""
@@ -113,22 +118,50 @@ class ProcessExecutor(SweepExecutor):
     ``ex.map`` yields results in submission order, so the merged record
     list is deterministic and identical to :class:`SerialExecutor` —
     per-point trace-cache counters included, since every worker runs the
-    same per-point ``run_point`` code on the same pickled programs."""
+    same per-point ``run_point`` code on the same pickled programs.
+
+    ``persistent=True`` keeps the spawn pool alive across ``imap_jobs``
+    calls instead of paying interpreter start-up per call — built for
+    multi-round drivers (the search tuner confirms a small survivor
+    batch per rung) where a fresh pool per rung would cost more than
+    the rung's simulation. Persistent instances must be :meth:`close`\\
+    d (or used as a context manager) by whoever constructed them."""
 
     name = "process"
 
-    def __init__(self, max_workers: int = 4):
+    def __init__(self, max_workers: int = 4, persistent: bool = False):
         self.max_workers = max(1, max_workers)
+        self.persistent = persistent
+        self._pool = None
+
+    def _make_pool(self) -> ProcessPoolExecutor:
+        ctx = multiprocessing.get_context("spawn")
+        return ProcessPoolExecutor(max_workers=self.max_workers,
+                                   mp_context=ctx)
 
     def imap_jobs(self, jobs: Sequence[PointJob]
                   ) -> Iterator["PointRecord"]:
-        ctx = multiprocessing.get_context("spawn")
         # chunk so each worker amortizes its interpreter start over
         # several points instead of one round-trip per point
         chunk = max(1, len(jobs) // (self.max_workers * 4))
-        with ProcessPoolExecutor(max_workers=self.max_workers,
-                                 mp_context=ctx) as ex:
+        if self.persistent:
+            if self._pool is None:
+                self._pool = self._make_pool()
+            yield from self._pool.map(run_job, jobs, chunksize=chunk)
+            return
+        with self._make_pool() as ex:
             yield from ex.map(run_job, jobs, chunksize=chunk)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "ProcessExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 EXECUTORS = {cls.name: cls

@@ -21,6 +21,28 @@ from typing import Dict, List
 from repro.kvi.obs.svg import line_chart, scatter_chart
 
 
+def write_search_plots(result, out_dir: str) -> List[str]:
+    """``dse_search_trajectory.svg`` — the auto-tuner's best-so-far
+    workload-mix cycles against cycle-accurate evaluations spent, the
+    anytime curve that shows what each additional simulation bought.
+    Returns the written filenames (empty when the trajectory never
+    produced a feasible best)."""
+    points = [(t["high_evals"], float(t["best_mix_cycles"]))
+              for t in result.trajectory
+              if t.get("best_mix_cycles") is not None]
+    if not points:
+        return []
+    svg = line_chart(
+        f"{result.strategy} (seed {result.seed}): best-so-far",
+        "cycle-accurate evaluations",
+        "best workload-mix cycles",
+        {result.strategy: points})
+    fname = "dse_search_trajectory.svg"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(svg + "\n")
+    return [fname]
+
+
 def _kernel_measure(rec, kern: str):
     if kern == "composite":
         return rec.composite

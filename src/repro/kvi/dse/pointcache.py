@@ -266,6 +266,41 @@ class PointCache:
         self.corrupt_discarded = 0
         self._entries: Optional[Dict[str, Dict[str, object]]] = None
         self._labels: Dict[tuple, str] = {}
+        self._rounds: list = []
+        self._round_base: Optional[Dict[str, int]] = None
+
+    # -- round accounting -------------------------------------------------
+
+    _COUNTERS = ("hits", "misses", "invalidations", "pallas_hits",
+                 "pallas_misses", "stores", "corrupt_discarded")
+
+    def _counter_snapshot(self) -> Dict[str, int]:
+        return {c: getattr(self, c) for c in self._COUNTERS}
+
+    def _close_round(self) -> None:
+        if self._round_base is None:
+            return
+        snap = self._counter_snapshot()
+        self._rounds[-1].update(
+            {c: snap[c] - self._round_base[c] for c in self._COUNTERS})
+        self._round_base = None
+
+    def begin_round(self, label: str) -> None:
+        """Open a named accounting round: counter deltas from here to
+        the next ``begin_round`` (or a ``stats`` read) are attributed to
+        ``label`` in :attr:`rounds`. Multi-round drivers (the search
+        tuner's successive-halving rungs) use this to show *which* rung
+        the cache paid off in — lifetime counters alone can't."""
+        self._close_round()
+        self._rounds.append({"label": str(label)})
+        self._round_base = self._counter_snapshot()
+
+    @property
+    def rounds(self) -> list:
+        """Per-round counter deltas: ``[{"label", "hits", ...}, ...]``.
+        The open round (if any) is closed by the read."""
+        self._close_round()
+        return [dict(r) for r in self._rounds]
 
     # -- loading ----------------------------------------------------------
 
@@ -409,12 +444,16 @@ class PointCache:
         """This run's counters plus store shape — what lands in sweep
         meta (``meta["point_cache"]``, scrubbed from canonical JSON)
         and in ``dse_cache_stats.json``."""
-        return {"hits": self.hits, "misses": self.misses,
-                "invalidations": self.invalidations,
-                "pallas_hits": self.pallas_hits,
-                "pallas_misses": self.pallas_misses,
-                "stores": self.stores,
-                "corrupt_discarded": self.corrupt_discarded,
-                "entries": self.n_entries,
-                "store_bytes": self.store_bytes,
-                "path": self.path}
+        out: Dict[str, object] = {
+            "hits": self.hits, "misses": self.misses,
+            "invalidations": self.invalidations,
+            "pallas_hits": self.pallas_hits,
+            "pallas_misses": self.pallas_misses,
+            "stores": self.stores,
+            "corrupt_discarded": self.corrupt_discarded,
+            "entries": self.n_entries,
+            "store_bytes": self.store_bytes,
+            "path": self.path}
+        if self._rounds:
+            out["rounds"] = self.rounds
+        return out

@@ -417,6 +417,16 @@ def render_markdown(report: Dict[str, object],
     return "\n".join(lines)
 
 
+#: appended to ``dse_report.md`` when the auto-tuner's trajectory
+#: figure sits next to it (either tool may run first — both link it).
+SEARCH_TRAJECTORY_SECTION = (
+    "\n## Auto-tuner trajectory\n\n"
+    "The budget-constrained search (`python -m repro.kvi.dse search`) "
+    "over this space — best-so-far workload-mix cycles per "
+    "cycle-accurate evaluation spent (details in `dse_search.md`):\n\n"
+    "![search trajectory](dse_search_trajectory.svg)\n")
+
+
 def smoke_space() -> DesignSpace:
     """The CI sweep: 3 schemes x D in (2,4,8,16) x 8/16/32-bit = 36
     points, seconds of wall time."""
@@ -471,8 +481,12 @@ def run_dse(smoke: bool = False, seed: int = 0,
         result.save_json(os.path.join(out_dir, "dse_sweep.json"))
         result.save_csv(os.path.join(out_dir, "dse_sweep.csv"))
         plots = write_plots(result, report, out_dir)
+        md = render_markdown(report, plots=plots)
+        if os.path.exists(os.path.join(out_dir,
+                                       "dse_search_trajectory.svg")):
+            md += SEARCH_TRAJECTORY_SECTION
         with open(os.path.join(out_dir, "dse_report.md"), "w") as f:
-            f.write(render_markdown(report, plots=plots))
+            f.write(md)
         with open(os.path.join(out_dir, "BENCH_kvi_dse.json"), "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         if cache is not None:

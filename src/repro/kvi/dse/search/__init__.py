@@ -1,0 +1,52 @@
+"""Budget-constrained auto-tuner: *search* the design space instead of
+enumerating it.
+
+The exhaustive sweep (:mod:`repro.kvi.dse.sweep`) reproduces the
+paper's 96-point comparison, but enumeration stops scaling exactly
+where the ROADMAP goes next — mesh axes, fu_counts and precision
+multiply the grid into thousands of points. This package inverts the
+sweep into a design *question*: given an area/energy budget and a
+workload mix, find the best configuration while running the
+cycle-accurate simulator on as few points as possible.
+
+The pieces:
+
+  * :class:`~repro.kvi.dse.search.sampler.CandidateSampler` — draws
+    feasible points from constraint predicates
+    (:class:`~repro.kvi.dse.space.SpaceConstraints`) by decoding random
+    flat indices (``DesignSpace.point_at``) — the grid is never
+    materialized. Also the mutation/crossover operators the
+    evolutionary strategy uses.
+  * :class:`~repro.kvi.dse.search.evaluator.TwoFidelityEvaluator` —
+    the **low-fidelity** rung scores candidates purely from the
+    analytic cost model (:func:`repro.kvi.dse.cost.estimate_kernel`)
+    plus the static SPM preflight — no lowering, no simulation,
+    thousands of points per second. The **high-fidelity** rung batch-
+    confirms survivors on :class:`~repro.kvi.cyclesim.CycleSimBackend`
+    through the existing sweep executors, persistent
+    :class:`~repro.kvi.dse.pointcache.PointCache` and shared
+    ``TraceCache`` — revisited candidates are free across rounds.
+  * :mod:`~repro.kvi.dse.search.strategies` — pluggable seed-
+    deterministic strategies (``random``, ``successive_halving``,
+    ``evolutionary``), all emitting best-so-far trajectories.
+  * :class:`~repro.kvi.dse.search.result.SearchResult` — the report:
+    best config, trajectory, evaluations-vs-exhaustive fraction, with
+    the same canonical-JSON / volatile-scrub determinism contract as
+    the sweep.
+  * :func:`~repro.kvi.dse.search.driver.run_search` — the driver the
+    ``python -m repro.kvi.dse search`` CLI and the bench harness call.
+"""
+from __future__ import annotations
+
+from repro.kvi.dse.search.driver import run_search  # noqa: F401
+from repro.kvi.dse.search.evaluator import (LowFidScore,  # noqa: F401
+                                            TwoFidelityEvaluator)
+from repro.kvi.dse.search.result import (SearchResult,  # noqa: F401
+                                         front_recovery)
+from repro.kvi.dse.search.sampler import CandidateSampler  # noqa: F401
+from repro.kvi.dse.search.strategies import (STRATEGIES,  # noqa: F401
+                                             SearchBudget, StrategyRun)
+
+__all__ = ["CandidateSampler", "TwoFidelityEvaluator", "LowFidScore",
+           "SearchBudget", "StrategyRun", "STRATEGIES", "SearchResult",
+           "front_recovery", "run_search"]

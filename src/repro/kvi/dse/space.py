@@ -24,7 +24,7 @@ allocator's :class:`~repro.kvi.lowering.SpmOverflowError` check.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.configs.base import KlessydraConfig
 
@@ -192,6 +192,66 @@ class DesignSpace:
             if f < 1:
                 bad("het_fus", f"must be >= 1, got {f}")
 
+    def _mf_pairs(self, scheme: str) -> List[Tuple[int, int]]:
+        """The scheme-consistent (M, F) combinations of this space."""
+        if scheme == "shared":
+            return [(1, 1)]
+        if scheme == "sym_mimd":
+            return [(m, m) for m in self.replication]
+        return [(m, f) for m in self.replication
+                for f in self.het_fus if f < m]
+
+    def _scheme_fus(self, scheme: str) -> tuple:
+        """The fu_counts axis applies to het-MIMD only (see points())."""
+        return self.fu_counts if scheme == "het_mimd" else ((),)
+
+    @property
+    def grid_size(self) -> int:
+        """Number of grid cells WITHOUT enumerating them — the product
+        of the per-scheme sub-grids. Equals ``len(self.points())`` when
+        the axes carry no duplicate values (points() dedups by name)."""
+        inner = (len(self.lanes) * len(self.precisions)
+                 * len(self.spm_kbytes) * len(self.chaining)
+                 * len(self.pipelines))
+        return sum(len(self._mf_pairs(s)) * inner * len(self._scheme_fus(s))
+                   for s in self.schemes)
+
+    def point_at(self, index: int) -> DesignPoint:
+        """Decode flat ``index`` (mixed-radix over the axes, in exactly
+        the :meth:`points` nesting order) into a :class:`DesignPoint` —
+        O(1) random access into the grid without materializing it. The
+        lazy primitive :class:`~repro.kvi.dse.search.CandidateSampler`
+        draws from: ``space.point_at(rng.randrange(space.grid_size))``
+        is a uniform sample of the grid."""
+        if index < 0:
+            raise IndexError(f"point_at: negative index {index}")
+        i = index
+        for scheme in self.schemes:
+            mf_pairs = self._mf_pairs(scheme)
+            fus = self._scheme_fus(scheme)
+            block = (len(mf_pairs) * len(self.lanes)
+                     * len(self.precisions) * len(self.spm_kbytes)
+                     * len(self.chaining) * len(self.pipelines)
+                     * len(fus))
+            if i >= block:
+                i -= block
+                continue
+            # innermost axis varies fastest, mirroring points() nesting
+            i, fu_i = divmod(i, len(fus))
+            i, pipe_i = divmod(i, len(self.pipelines))
+            i, ch_i = divmod(i, len(self.chaining))
+            i, spm_i = divmod(i, len(self.spm_kbytes))
+            i, prec_i = divmod(i, len(self.precisions))
+            mf_i, d_i = divmod(i, len(self.lanes))
+            m, f = mf_pairs[mf_i]
+            return DesignPoint(scheme, m, f, self.lanes[d_i],
+                               self.precisions[prec_i],
+                               self.spm_kbytes[spm_i],
+                               self.chaining[ch_i], fus[fu_i],
+                               self.pipelines[pipe_i])
+        raise IndexError(f"point_at: index {index} out of range for a "
+                         f"{self.grid_size}-cell grid")
+
     def points(self) -> Tuple[DesignPoint, ...]:
         """Deterministic enumeration of all valid design points.
         Scheme-inconsistent combinations (e.g. het F >= M) are skipped;
@@ -204,14 +264,8 @@ class DesignSpace:
         out: List[DesignPoint] = []
         seen = set()
         for scheme in self.schemes:
-            if scheme == "shared":
-                mf_pairs = [(1, 1)]
-            elif scheme == "sym_mimd":
-                mf_pairs = [(m, m) for m in self.replication]
-            else:
-                mf_pairs = [(m, f) for m in self.replication
-                            for f in self.het_fus if f < m]
-            fus = self.fu_counts if scheme == "het_mimd" else ((),)
+            mf_pairs = self._mf_pairs(scheme)
+            fus = self._scheme_fus(scheme)
             for m, f in mf_pairs:
                 for d in self.lanes:
                     for prec in self.precisions:
@@ -230,6 +284,77 @@ class DesignSpace:
     @property
     def size(self) -> int:
         return len(self.points())
+
+
+@dataclass(frozen=True)
+class SpaceConstraints:
+    """Budget / axis predicates a candidate must satisfy *before* any
+    simulation — what turns a grid into a constrained design question
+    ("the best config under this area budget"). Every check here is
+    closed-form over the analytic cost model, so feasibility of
+    thousands of candidates per second is practical; workload-dependent
+    checks (SPM fit, measured energy) belong to the search evaluator.
+
+      * ``max_area_luteq`` — hardware area budget (LUT-equivalents,
+        :func:`repro.kvi.dse.cost.hardware_cost`),
+      * ``max_static_nj_per_cycle`` — static-power budget
+        (:func:`repro.kvi.dse.cost.energy_per_cycle_static`),
+      * ``schemes`` / ``max_lanes`` / ``precisions`` — axis filters,
+      * ``predicate`` — an arbitrary extra ``point -> bool`` (must be a
+        deterministic pure function; it enters no cache key).
+    """
+
+    max_area_luteq: Optional[float] = None
+    max_static_nj_per_cycle: Optional[float] = None
+    schemes: Optional[Tuple[str, ...]] = None
+    max_lanes: Optional[int] = None
+    precisions: Optional[Tuple[int, ...]] = None
+    predicate: Optional[Callable[[DesignPoint], bool]] = None
+
+    def reject_reason(self, point: DesignPoint) -> Optional[str]:
+        """Why ``point`` is infeasible, or ``None`` when it satisfies
+        every constraint. Axis filters run first (no cost-model work);
+        the area/energy budgets evaluate the analytic model."""
+        if self.schemes is not None and point.scheme not in self.schemes:
+            return f"scheme {point.scheme!r} excluded"
+        if self.max_lanes is not None and point.D > self.max_lanes:
+            return f"D={point.D} exceeds max_lanes={self.max_lanes}"
+        if self.precisions is not None \
+                and point.precision_bits not in self.precisions:
+            return f"precision {point.precision_bits} excluded"
+        if self.predicate is not None and not self.predicate(point):
+            return "predicate rejected"
+        if self.max_area_luteq is not None \
+                or self.max_static_nj_per_cycle is not None:
+            from repro.kvi.dse.cost import (energy_per_cycle_static,
+                                            hardware_cost)
+            cfg = point.config()
+            if self.max_area_luteq is not None:
+                area = hardware_cost(cfg).area_luteq
+                if area > self.max_area_luteq:
+                    return (f"area {area:.0f} LUTeq exceeds budget "
+                            f"{self.max_area_luteq:.0f}")
+            if self.max_static_nj_per_cycle is not None:
+                nj = energy_per_cycle_static(cfg)
+                if nj > self.max_static_nj_per_cycle:
+                    return (f"static {nj:.3f} nJ/cycle exceeds budget "
+                            f"{self.max_static_nj_per_cycle:.3f}")
+        return None
+
+    def feasible(self, point: DesignPoint) -> bool:
+        return self.reject_reason(point) is None
+
+    def as_dict(self) -> dict:
+        """JSON-native view for search reports (``predicate`` is
+        surfaced only as a presence flag — it has no canonical form)."""
+        return {"max_area_luteq": self.max_area_luteq,
+                "max_static_nj_per_cycle": self.max_static_nj_per_cycle,
+                "schemes": list(self.schemes)
+                if self.schemes is not None else None,
+                "max_lanes": self.max_lanes,
+                "precisions": list(self.precisions)
+                if self.precisions is not None else None,
+                "has_predicate": self.predicate is not None}
 
 
 def preflight_point(point: DesignPoint, programs: Sequence,

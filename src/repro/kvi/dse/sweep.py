@@ -425,7 +425,8 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
           executor: Union[str, SweepExecutor, None] = None,
           measure_pallas: Optional[bool] = None,
           cache: Optional[PointCache] = None,
-          obs=None, progress_every: int = 16) -> SweepResult:
+          obs=None, progress_every: int = 16,
+          shared_opt_cache: Optional[Dict] = None) -> SweepResult:
     """Run every point of ``space`` over the kernels the factory builds
     for that point's precision. Kernel programs are built once per
     distinct precision, optimized once per distinct (precision, passes)
@@ -449,7 +450,14 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
     completed fresh points (throughput in points/s, cache hit rate, ETA)
     as the executor streams records back. ``obs`` attaches a telemetry
     bundle (:class:`repro.kvi.obs.Obs`): per-point wall spans on the
-    ``dse`` track plus sweep counters in the metrics registry."""
+    ``dse`` track plus sweep counters in the metrics registry.
+
+    ``shared_opt_cache`` (any mutable dict, created empty by the caller)
+    carries the built/optimized kernel programs and their fingerprints
+    *across* sweep calls: multi-round drivers (the search tuner batch-
+    confirming one survivor rung per call) pass the same dict every
+    round so programs optimize and hash once per (precision, passes)
+    pair for the whole search, not once per round."""
     points = space.points() if isinstance(space, DesignSpace) \
         else tuple(space)
     if not points:
@@ -458,7 +466,10 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
         points = tuple(
             dataclasses.replace(pt, measure_pallas=measure_pallas)
             for pt in points)
-    kernels_by_prec: Dict[int, Dict[str, KviProgram]] = {}
+    if shared_opt_cache is None:
+        shared_opt_cache = {}
+    kernels_by_prec: Dict[int, Dict[str, KviProgram]] = \
+        shared_opt_cache.setdefault("raw", {})
     for pt in points:
         if pt.precision_bits not in kernels_by_prec:
             kernels_by_prec[pt.precision_bits] = \
@@ -466,7 +477,8 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
     kernel_names = tuple(next(iter(kernels_by_prec.values())))
     # the optimized programs depend only on (precision, passes) — run
     # the pipeline once per distinct pair, not once per point
-    opt_cache: Dict[tuple, Dict[str, KviProgram]] = {}
+    opt_cache: Dict[tuple, Dict[str, KviProgram]] = \
+        shared_opt_cache.setdefault("opt", {})
     for pt in points:
         key = (pt.precision_bits, pt.passes)
         if key not in opt_cache:
@@ -482,9 +494,11 @@ def sweep(space: Union[DesignSpace, Sequence[DesignPoint]],
     if cache is not None:
         # program fingerprints are shared per (precision, passes) set —
         # hash each optimized program once, not once per point
-        fp_cache = {k: {name: program_fingerprint(p)
-                        for name, p in kernels.items()}
-                    for k, kernels in opt_cache.items()}
+        fp_cache = shared_opt_cache.setdefault("fp", {})
+        for k, kernels in opt_cache.items():
+            if k not in fp_cache:
+                fp_cache[k] = {name: program_fingerprint(p)
+                               for name, p in kernels.items()}
         for i, pt in enumerate(points):
             pk = point_key(pt, fp_cache[(pt.precision_bits, pt.passes)],
                            composite)

@@ -24,7 +24,7 @@ from __future__ import annotations
 DSE_VOLATILE = frozenset({"wall_s", "walltime_s", "pallas_walltime_s",
                           "pallas_compile_s", "pallas_steady_s",
                           "total_wall_s", "executor",
-                          "cached", "point_cache"})
+                          "cached", "point_cache", "fresh_evals"})
 
 #: the serving engine's wall-clock / rate fields, on top of the DSE set
 #: (its report embeds backend meta that carries the DSE names).
